@@ -1,0 +1,131 @@
+"""Reordering benchmarks: paper Figs 4.4-4.6 + third-stage Tables 4.5/4.6.
+
+DB vs scipy's min_weight_full_bipartite_matching (the MC64 stand-in) and
+CM vs scipy's reverse_cuthill_mckee (the MC60 stand-in), over a suite of
+generated sparse matrices; metrics mirror the paper: log2 speedup, diag
+product quality, relative bandwidth difference r_K.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import scipy.sparse as sp
+import scipy.sparse.csgraph as csgraph
+
+from repro.core import reorder as R
+from repro.core.sparse import random_sparse
+
+from .common import Report, timeit
+
+
+def _suite():
+    specs = [
+        (1000, 4.0, 1.5, 0), (2000, 6.0, 1.0, 1), (4000, 5.0, 2.0, 2),
+        (2000, 8.0, 0.8, 3), (8000, 4.0, 1.2, 4),
+    ]
+    out = []
+    for n, nnz, d, seed in specs:
+        csr = random_sparse(n, avg_nnz_per_row=nnz, d=d, shuffle=True,
+                            seed=seed)
+        rng = np.random.default_rng(seed + 100)
+        csr = R.permute_rows(csr, rng.permutation(n))  # scramble diagonal
+        out.append((f"n{n}_s{seed}", csr))
+    return out
+
+
+def _log_diag_product(csr, perm):
+    dense_diag = np.zeros(csr.n)
+    rows = csr.row_ids()
+    inv_rows = perm[np.arange(csr.n)]
+    lookup = {(int(r), int(c)): v for r, c, v in zip(rows, csr.indices, csr.data)}
+    for i in range(csr.n):
+        dense_diag[i] = abs(lookup.get((int(perm[i]), i), 0.0))
+    return float(np.sum(np.log(np.maximum(dense_diag, 1e-300))))
+
+
+def bench_db(report: Report):
+    for name, csr in _suite():
+        us_ours = timeit(lambda: R.diagonal_boosting(csr), warmup=0, iters=1)
+        perm = R.diagonal_boosting(csr)
+        q_ours = _log_diag_product(csr, perm)
+
+        m = sp.csr_matrix(
+            (np.abs(csr.data), csr.indices, csr.indptr), shape=(csr.n, csr.n)
+        )
+        mw = m.copy()
+        mw.data = -np.log(np.maximum(mw.data, 1e-300))
+
+        def scipy_match():
+            return csgraph.min_weight_full_bipartite_matching(mw)
+
+        us_ref = timeit(scipy_match, warmup=0, iters=1)
+        row, col = scipy_match()
+        ref_perm = np.empty(csr.n, dtype=np.int64)
+        ref_perm[col] = row
+        q_ref = _log_diag_product(csr, ref_perm)
+        s = np.log2(us_ref / us_ours)
+        report.add(
+            f"fig4.4/db/{name}", us_ours,
+            f"log2_speedup_vs_mc64ref={s:.2f};quality_ours={q_ours:.1f};"
+            f"quality_ref={q_ref:.1f}",
+        )
+
+
+def bench_cm(report: Report):
+    for name, csr in _suite():
+        sym = R.symmetrize(csr)
+        us_ours = timeit(lambda: R.cuthill_mckee(sym), warmup=0, iters=1)
+        perm = R.cuthill_mckee(sym)
+        k_ours = R.half_bandwidth(R.permute_symmetric(csr, perm))
+
+        m = sp.csr_matrix(
+            (np.ones_like(sym.data), sym.indices, sym.indptr),
+            shape=(csr.n, csr.n),
+        )
+        us_ref = timeit(
+            lambda: csgraph.reverse_cuthill_mckee(m, symmetric_mode=True),
+            warmup=0, iters=1,
+        )
+        rcm = np.asarray(
+            csgraph.reverse_cuthill_mckee(m, symmetric_mode=True)
+        )
+        k_ref = R.half_bandwidth(R.permute_symmetric(csr, rcm))
+        r_k = 100.0 * (k_ref - k_ours) / max(k_ours, 1)  # paper Eq (r_K)
+        report.add(
+            f"fig4.5/cm/{name}", us_ours,
+            f"K_ours={k_ours};K_mc60ref={k_ref};r_K={r_k:.1f}%;"
+            f"log2_speedup={np.log2(us_ref/us_ours):.2f}",
+        )
+
+
+def bench_third_stage(report: Report):
+    """Tables 4.5/4.6: per-partition K_i reduction and solve speedup."""
+    import jax.numpy as jnp
+
+    from repro.core import SaPOptions, solve_banded
+
+    for name, csr in _suite()[:3]:
+        perm_db = R.diagonal_boosting(csr)
+        c2 = R.permute_rows(csr, perm_db)
+        perm_cm = R.cuthill_mckee(R.symmetrize(c2))
+        c3 = R.permute_symmetric(c2, perm_cm)
+        k = max(R.half_bandwidth(c3), 1)
+        p = 8
+        part = -(-csr.n // p)
+        n_pad = part * p
+        band = np.zeros((n_pad, 2 * k + 1))
+        band[: csr.n] = R.csr_to_band(c3, k)
+        band[csr.n :, k] = 1.0
+        us3 = timeit(lambda: R.third_stage(band, k, p, part), warmup=0, iters=1)
+        perm3, k_i = R.third_stage(band, k, p, part)
+        report.add(
+            f"table4.5/third_stage/{name}", us3,
+            f"K_before={k};K_i_max_after={int(k_i.max())};"
+            f"K_i={','.join(map(str, k_i.tolist()))}",
+        )
+
+
+def run(report: Report):
+    bench_db(report)
+    bench_cm(report)
+    bench_third_stage(report)

@@ -1,0 +1,134 @@
+"""Dense-banded solver benchmarks: paper Tables 4.1-4.3 / Figs 4.1-4.3.
+
+CPU-scaled sizes (the full-size cells live in the dry-run/roofline path):
+  * P sweep   (Table 4.1):  N=8192, K=16, d=1.0, P in {2..32}, C vs D
+  * d sweep   (Table 4.2):  N=8192, K=16, P=16,  d in {0.06..1.2}
+  * NxK sweep (Table 4.3):  SaP vs the direct banded solver (P=1 block-
+    tridiag factor+solve == the sequential "MKL stand-in")
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SaPOptions, solve_banded
+from repro.core.banded import band_matvec, band_to_block_tridiag, random_banded
+from repro.core.block_lu import btf_ref, bts_ref
+
+from .common import Report, timeit
+
+
+def _make_cached_solver(band, opts):
+    """Build the preconditioner + closures ONCE so repeated calls hit the
+    jit cache -- separates execution time from trace/compile/setup time."""
+    from repro.core.banded import band_to_block_tridiag
+    from repro.core.krylov import bicgstab2
+    from repro.core.spike import build_preconditioner
+
+    k = (band.shape[1] - 1) // 2
+    bt = band_to_block_tridiag(band, max(k, 1), opts.p)
+    pc = build_preconditioner(bt, variant=opts.variant)
+    n_pad = bt.n_pad
+
+    def matvec(x):
+        return band_matvec(band, x)
+
+    def precond(r):
+        rp = jnp.concatenate([r, jnp.zeros((n_pad - r.shape[0],), r.dtype)])
+        return pc.apply(rp)[: r.shape[0]]
+
+    def solve(b):
+        return bicgstab2(matvec, b, precond=precond, tol=opts.tol,
+                         maxiter=opts.maxiter).x
+
+    return solve
+
+
+def _system(n, k, d, seed=0):
+    band = jnp.asarray(random_banded(n, k, d=d, seed=seed), jnp.float32)
+    rng = np.random.default_rng(seed + 1)
+    xstar = rng.normal(size=n)
+    b = jnp.asarray(np.asarray(band_matvec(band, jnp.asarray(xstar))),
+                    jnp.float32)
+    return band, b, xstar
+
+
+def _direct_banded(band, b):
+    """Sequential direct banded solve (P=1) -- the MKL stand-in."""
+    k = (band.shape[1] - 1) // 2
+    bt = band_to_block_tridiag(band, k, 1)
+    fac = btf_ref(bt.d, bt.e, bt.f)
+    rb = jnp.concatenate([b, jnp.zeros(bt.n_pad - b.shape[0], b.dtype)])
+    x = bts_ref(fac, rb.reshape(1, bt.m, bt.k, 1))
+    return x.reshape(-1)[: b.shape[0]]
+
+
+def bench_p_sweep(report: Report):
+    import jax
+
+    jax.clear_caches()
+    n, k = 8192, 16
+    band, b, xstar = _system(n, k, 1.0)
+    for p in (2, 4, 8, 16, 32):
+        for variant in ("C", "D"):
+            opts = SaPOptions(p=p, variant=variant, tol=1e-6, maxiter=200)
+            sol = solve_banded(band, b, opts)  # warm correctness check
+            err = np.linalg.norm(np.asarray(sol.x) - xstar) / np.linalg.norm(xstar)
+            solve = _make_cached_solver(band, opts)
+            us = timeit(solve, b)  # cached-executable time (paper's T_Kry)
+            report.add(
+                f"table4.1/p_sweep/P={p}/{variant}",
+                us,
+                f"iters={sol.iterations:.2f};relerr={err:.1e}",
+            )
+
+
+def bench_d_sweep(report: Report):
+    import jax
+
+    jax.clear_caches()
+    n, k, p = 4096, 16, 16
+    for d in (0.06, 0.1, 0.3, 0.6, 1.0, 1.2):
+        band, b, xstar = _system(n, k, d)
+        for variant in ("C", "D"):
+            opts = SaPOptions(p=p, variant=variant, tol=1e-6, maxiter=500)
+            sol = solve_banded(band, b, opts)
+            err = np.linalg.norm(np.asarray(sol.x) - xstar) / np.linalg.norm(xstar)
+            solve = _make_cached_solver(band, opts)
+            us = timeit(solve, b, iters=1)
+            report.add(
+                f"table4.2/d_sweep/d={d}/{variant}",
+                us,
+                f"iters={sol.iterations:.2f};relerr={err:.1e};conv={sol.converged}",
+            )
+
+
+def bench_nk_sweep(report: Report):
+    import jax
+
+    for n in (2048, 4096):
+        jax.clear_caches()  # bound the XLA CPU jit code cache
+        for k in (8, 16):
+            band, b, xstar = _system(n, k, 1.0)
+            us_direct = timeit(lambda: _direct_banded(band, b))
+            xd = np.asarray(_direct_banded(band, b))
+            err_d = np.linalg.norm(xd - xstar) / np.linalg.norm(xstar)
+            report.add(f"table4.3/direct/N={n}/K={k}", us_direct,
+                       f"relerr={err_d:.1e}")
+            for variant in ("C", "D"):
+                opts = SaPOptions(p=8, variant=variant, tol=1e-6)
+                sol = solve_banded(band, b, opts)
+                solve = _make_cached_solver(band, opts)
+                us = timeit(solve, b)
+                report.add(
+                    f"table4.3/sap{variant}/N={n}/K={k}",
+                    us,
+                    f"speedup_vs_direct={us_direct/us:.2f};iters={sol.iterations:.2f}",
+                )
+
+
+def run(report: Report):
+    bench_p_sweep(report)
+    bench_d_sweep(report)
+    bench_nk_sweep(report)

@@ -1,0 +1,137 @@
+"""Sparse solver suite: paper Sec 4.3.3 / Table A.2 analogue.
+
+A batch of generated sparse systems (banded provenance scrambled by random
+permutations, varying dominance/density) solved by SaP::TPU (C and D) and
+by a dense direct solve (the PARDISO stand-in at these sizes).  Reports
+robustness counts and times; the paper's 1% relative-accuracy criterion
+decides success.  Also emits the stage profile (Fig 4.7/4.8 analogue).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import SaPOptions, solve_sparse
+from repro.core import reorder as R
+from repro.core.banded import random_rhs
+from repro.core.sparse import random_sparse
+
+from .common import Report
+
+
+def _suite():
+    specs = [
+        ("ancf_like", 2000, 5.8, 1.2, True),
+        ("fe_mild", 1500, 6.0, 0.8, True),
+        ("dominant", 3000, 4.0, 2.0, True),
+        ("weak_diag", 1000, 6.0, 0.3, True),
+        ("wide_band", 1500, 12.0, 1.0, True),
+        ("tiny", 512, 4.0, 1.0, True),
+        ("mid_sparse", 4000, 3.0, 1.5, True),
+        ("dense_band", 1024, 16.0, 1.0, False),
+    ]
+    for i, (name, n, nnz, d, shuf) in enumerate(specs):
+        csr = random_sparse(n, avg_nnz_per_row=nnz, d=d, shuffle=shuf, seed=i)
+        rng = np.random.default_rng(1000 + i)
+        csr = R.permute_rows(csr, rng.permutation(n))
+        yield name, csr
+
+
+def run(report: Report):
+    solved = {"sapC": 0, "sapD": 0, "direct": 0}
+    total = 0
+    for name, csr in _suite():
+        total += 1
+        xstar = np.asarray(random_rhs(csr.n))  # paper's parabola solution
+        dense = csr.to_dense()
+        b = dense @ xstar
+
+        # direct dense solve (PARDISO stand-in)
+        t0 = time.perf_counter()
+        try:
+            xd = np.linalg.solve(dense, b)
+            us_direct = (time.perf_counter() - t0) * 1e6
+            err_d = np.linalg.norm(xd - xstar) / np.linalg.norm(xstar)
+            ok_d = err_d <= 0.01
+        except np.linalg.LinAlgError:
+            us_direct, ok_d = float("nan"), False
+        solved["direct"] += ok_d
+        report.add(f"tableA.2/direct/{name}", us_direct, f"ok={ok_d}")
+
+        for variant in ("C", "D"):
+            t0 = time.perf_counter()
+            try:
+                sol = solve_sparse(
+                    csr, b,
+                    SaPOptions(p=8, variant=variant, tol=1e-8, maxiter=500),
+                )
+                us = (time.perf_counter() - t0) * 1e6
+                err = np.linalg.norm(sol.x - xstar) / np.linalg.norm(xstar)
+                ok = bool(sol.converged and err <= 0.01)
+                info = (f"ok={ok};iters={sol.iterations:.2f};"
+                        f"K={sol.k};relerr={err:.1e}")
+            except Exception as e:  # robustness accounting, like the paper
+                us, ok, info = float("nan"), False, f"ok=False;error={type(e).__name__}"
+            solved[f"sap{variant}"] += ok
+            report.add(f"tableA.2/sap{variant}/{name}", us, info)
+
+    report.add(
+        "tableA.2/robustness", 0.0,
+        f"sapC={solved['sapC']}/{total};sapD={solved['sapD']}/{total};"
+        f"direct={solved['direct']}/{total}",
+    )
+
+
+def profile_stages(report: Report):
+    """Fig 4.7/4.8: % of time per stage (DB, CM, Asmbl, LU, Kry)."""
+    csr = random_sparse(3000, avg_nnz_per_row=6.0, d=1.2, shuffle=True, seed=7)
+    rng = np.random.default_rng(99)
+    csr = R.permute_rows(csr, rng.permutation(csr.n))
+    xstar = np.asarray(random_rhs(csr.n))
+    b = csr.to_dense() @ xstar
+
+    import jax.numpy as jnp
+
+    from repro.core.banded import band_to_block_tridiag
+    from repro.core.sap import _csr_matvec_fn, _krylov_solve
+
+    t = {}
+    t0 = time.perf_counter()
+    perm = R.diagonal_boosting(csr)
+    c2 = R.permute_rows(csr, perm)
+    t["DB"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sym = R.cuthill_mckee(R.symmetrize(c2))
+    c3 = R.permute_symmetric(c2, sym)
+    t["CM"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    k = max(R.half_bandwidth(c3), 1)
+    band = R.csr_to_band(c3, k)
+    t["Asmbl"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    from repro.core.spike import build_preconditioner
+
+    bt = band_to_block_tridiag(jnp.asarray(band, jnp.float32), k, 8)
+    pc = build_preconditioner(bt, "C")
+    import jax
+
+    jax.block_until_ready(pc.lu.sinv)
+    t["LU+SPK"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    b_r = jnp.asarray((b[perm])[sym], jnp.float32)
+    from repro.core.krylov import bicgstab2
+
+    mv = _csr_matvec_fn(c3)
+
+    def precond(r):
+        rp = jnp.concatenate([r, jnp.zeros(bt.n_pad - r.shape[0], r.dtype)])
+        return pc.apply(rp)[: r.shape[0]]
+
+    res = bicgstab2(mv, b_r, precond=precond, tol=1e-8, maxiter=300)
+    jax.block_until_ready(res.x)
+    t["Kry"] = time.perf_counter() - t0
+    total = sum(t.values())
+    pct = ";".join(f"{k2}={100*v/total:.1f}%" for k2, v in t.items())
+    report.add("fig4.7/stage_profile", total * 1e6, pct)

@@ -1,0 +1,94 @@
+"""Run the full multi-pod dry-run sweep: every (arch x shape x mesh) cell.
+
+Each cell runs in its own subprocess (clean XLA device-count env; a
+compile failure or OOM in one cell cannot kill the sweep) and writes
+``results/dryrun/<arch>__<shape>__<mesh>.json``.  Existing files are
+skipped, so the sweep is resumable.
+
+Usage:
+  python -m benchmarks.dryrun_sweep --mesh single          # 16x16
+  python -m benchmarks.dryrun_sweep --mesh multi           # 2x16x16
+  python -m benchmarks.dryrun_sweep --mesh single --only rwkv6-1.6b
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+RESULTS = REPO / "results" / "dryrun"
+
+
+def cells():
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.configs import ARCHS, get_config
+    from repro.configs.sap_solver import SOLVER_SHAPES
+    from repro.models import SHAPES, supports_shape
+
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for s in SHAPES.values():
+            if supports_shape(cfg, s):
+                out.append((arch, s.name))
+    for s in SOLVER_SHAPES:
+        out.append(("sap-solver", s))
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh: str, timeout: int, devices: int,
+             extra: list[str]) -> dict:
+    tag = f"{arch}__{shape}__{mesh}"
+    out_file = RESULTS / f"{tag}.json"
+    if out_file.exists():
+        return {"cell": tag, "status": "cached"}
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--out", str(out_file),
+    ] + (["--multi-pod"] if mesh == "multi" else []) + extra
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["REPRO_DRYRUN_DEVICES"] = str(devices)
+    t0 = time.time()
+    try:
+        proc = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=timeout, env=env
+        )
+        dt = time.time() - t0
+        if proc.returncode != 0:
+            err = {"cell": tag, "status": "failed", "wall_s": round(dt, 1),
+                   "stderr": proc.stderr[-4000:]}
+            out_file.with_suffix(".err.json").write_text(json.dumps(err, indent=2))
+            return err
+        return {"cell": tag, "status": "ok", "wall_s": round(dt, 1)}
+    except subprocess.TimeoutExpired:
+        return {"cell": tag, "status": "timeout", "wall_s": timeout}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--only", default=None, help="substring filter on arch")
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--devices", type=int, default=None)
+    args, extra = ap.parse_known_args()
+    devices = args.devices or (512 if args.mesh == "multi" else 256)
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    todo = cells()
+    if args.only:
+        todo = [c for c in todo if args.only in c[0]]
+    print(f"{len(todo)} cells on mesh={args.mesh}", flush=True)
+    for arch, shape in todo:
+        res = run_cell(arch, shape, args.mesh, args.timeout, devices, extra)
+        print(json.dumps(res), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Perf hillclimbing driver: runs dry-run variants of the three chosen
+cells and collects the roofline terms per iteration.
+
+    python -m benchmarks.hillclimb [--only A|B|C]
+
+Writes results/hillclimb/<cell>__<tag>.json.  The hypothesis->measure log
+lives in EXPERIMENTS.md section Perf.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+OUT = REPO / "results" / "hillclimb"
+
+CELLS = {
+    # A: worst footprint + every term bad: mixtral train
+    "A": [
+        ("mixtral-8x22b", "train_4k", "A0_baseline", []),
+        ("mixtral-8x22b", "train_4k", "A1_zero1", ["--zero1"]),
+        ("mixtral-8x22b", "train_4k", "A2_zero1_master",
+         ["--zero1", "--master-weights"]),
+        ("mixtral-8x22b", "train_4k", "A3_zero1_master_micro8",
+         ["--zero1", "--master-weights", "--microbatches", "8"]),
+        ("mixtral-8x22b", "train_4k", "A4_remat_dots",
+         ["--zero1", "--master-weights", "--microbatches", "8",
+          "--remat", "dots"]),
+        ("mixtral-8x22b", "train_4k", "A5_fsdp",
+         ["--zero1", "--master-weights", "--fsdp"]),
+        ("mixtral-8x22b", "train_4k", "A6_fsdp_micro2",
+         ["--zero1", "--master-weights", "--fsdp", "--microbatches", "2"]),
+    ],
+    # B: worst memory/compute skew: rwkv train (chunk-size = the paper's P
+    # tradeoff inside the SaP-scan)
+    "B": [
+        ("rwkv6-1.6b", "train_4k", "B0_baseline_chunk64", []),
+        ("rwkv6-1.6b", "train_4k", "B1_chunk32", ["--ssm-chunk", "32"]),
+        ("rwkv6-1.6b", "train_4k", "B2_chunk16", ["--ssm-chunk", "16"]),
+        ("rwkv6-1.6b", "train_4k", "B3_chunk8", ["--ssm-chunk", "8"]),
+        ("rwkv6-1.6b", "train_4k", "B4_chunk16_bf16",
+         ["--ssm-chunk", "16", "--scan-dtype", "bfloat16"]),
+    ],
+    # C: the paper's own workload: variant + mixed precision + partitioning
+    "C": [
+        ("sap-solver", "dense_200k", "C0_baseline_C_f32", ["--variant", "C"]),
+        ("sap-solver", "dense_200k", "C1_variant_D", ["--variant", "D"]),
+        ("sap-solver", "dense_200k", "C2_C_bf16",
+         ["--variant", "C", "--precond-dtype", "bfloat16"]),
+        ("sap-solver", "dense_200k", "C3_D_bf16",
+         ["--variant", "D", "--precond-dtype", "bfloat16"]),
+        ("sap-solver", "dense_200k", "C4_C_p4",
+         ["--variant", "C", "--p-per-device", "4"]),
+    ],
+}
+
+
+def run_one(arch, shape, tag, extra, devices=256):
+    out_file = OUT / f"{tag}.json"
+    if out_file.exists():
+        return {"tag": tag, "status": "cached"}
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", str(out_file)] + extra
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["REPRO_DRYRUN_DEVICES"] = str(devices)
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=3000,
+                          env=env)
+    if proc.returncode != 0:
+        err = {"tag": tag, "status": "failed", "stderr": proc.stderr[-3000:]}
+        out_file.with_suffix(".err.json").write_text(json.dumps(err, indent=2))
+        return err
+    row = json.loads(out_file.read_text())
+    r = row["roofline"]
+    return {
+        "tag": tag, "status": "ok",
+        "compute_s": round(r["compute_s"], 4),
+        "memory_s": round(r["memory_s"], 4),
+        "collective_s": round(r["collective_s"], 4),
+        "bottleneck": r["bottleneck"],
+        "mem_gib": round(row["memory"].get("total_per_device", 0) / 2**30, 2),
+        "useful": round(r["useful_ratio"], 3),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+    for cell, runs in CELLS.items():
+        if args.only and cell != args.only:
+            continue
+        for arch, shape, tag, extra in runs:
+            print(json.dumps(run_one(arch, shape, tag, extra)), flush=True)
+
+
+if __name__ == "__main__":
+    main()

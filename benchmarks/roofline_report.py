@@ -1,0 +1,105 @@
+"""Assemble the roofline report from results/dryrun/*.json.
+
+Produces the markdown tables for EXPERIMENTS.md (section Dry-run and
+section Roofline) and prints cell summaries.  The roofline table is
+single-pod (per the assignment); the multi-pod columns prove pod-axis
+sharding (collective schedule includes cross-pod traffic).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+RESULTS = REPO / "results" / "dryrun"
+
+
+def load(mesh: str):
+    rows = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_b(x):
+    for unit, div in (("GiB", 2**30), ("MiB", 2**20), ("KiB", 2**10)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(rows):
+    hdr = (
+        "| arch | shape | kind | flops/dev | HBM B/dev | coll B/dev | "
+        "compute | memory | collective | bound | useful | mem/dev |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        if "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory", {}).get("total_per_device", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('kind','?')} | "
+            f"{rf['flops']:.2e} | {fmt_b(rf['bytes_accessed'])} | "
+            f"{fmt_b(rf['coll_bytes'])} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"**{rf['bottleneck']}** | {rf['useful_ratio']:.2f} | "
+            f"{fmt_b(mem)} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def dryrun_table(rows):
+    hdr = (
+        "| arch | shape | mesh | chips | compile | params | mem/dev | "
+        "all-reduce | all-gather | reduce-scatter | all-to-all | permute |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        if "roofline" not in r:
+            continue
+        cd = r["roofline"]["coll_detail"]
+
+        def g(op):
+            e = cd.get(op)
+            return fmt_b(e["bytes"]) if e else "-"
+
+        mem = r.get("memory", {}).get("total_per_device", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{r['compile_s']}s | {r.get('params', r.get('n','-'))} | {fmt_b(mem)} | "
+            f"{g('all-reduce')} | {g('all-gather')} | {g('reduce-scatter')} | "
+            f"{g('all-to-all')} | {g('collective-permute')} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--table", default="roofline", choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    if args.table == "roofline":
+        print(roofline_table(rows))
+    else:
+        print(dryrun_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sizes are CPU-scaled; the
+full-scale (arch x shape x mesh) numbers come from the dry-run/roofline
+pipeline (see benchmarks/dryrun_sweep.py + benchmarks/roofline_report.py).
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from benchmarks.common import Report  # noqa: E402
+
+
+def main() -> None:
+    import jax
+
+    report = Report()
+    print("name,us_per_call,derived", flush=True)
+
+    from benchmarks import bench_solver  # noqa: E402
+
+    bench_solver.run(report)
+    jax.clear_caches()
+
+    from benchmarks import bench_reorder  # noqa: E402
+
+    bench_reorder.run(report)
+
+    from benchmarks import bench_sparse_suite  # noqa: E402
+
+    bench_sparse_suite.run(report)
+    bench_sparse_suite.profile_stages(report)
+    jax.clear_caches()
+
+    from benchmarks import bench_kernels  # noqa: E402
+
+    bench_kernels.run(report)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Distributed SaP solve across a device mesh (the paper's technique as a
+first-class distributed workload; partitions span every mesh axis).
+
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        PYTHONPATH=src python examples/distributed_solve.py
+"""
+
+import os
+import sys
+from pathlib import Path
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.banded import band_to_dense, random_banded
+from repro.core.distributed import build_dist_sap, solve_step_fn
+
+
+def main():
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh(
+        (2, ndev // 2), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    print(f"mesh: {dict(mesh.shape)} ({ndev} devices)")
+
+    n, k = 4096, 12
+    band = random_banded(n, k, d=1.0, seed=0)
+    dense = np.asarray(band_to_dense(jnp.asarray(band)))
+    xstar = np.random.default_rng(0).normal(size=n)
+    b = dense @ xstar
+
+    for variant in ("C", "D"):
+        dsap = build_dist_sap(mesh, n, k, variant=variant, p_per_device=2)
+        band_p, b_p, parts = dsap.shard_band(band, b)
+        step = jax.jit(solve_step_fn(dsap, tol=1e-6, maxiter=300))
+        with mesh:
+            x, its, res = step(
+                band_p.astype(jnp.float32), b_p.astype(jnp.float32),
+                parts["d"], parts["e"], parts["f"],
+                parts["b_next"], parts["c_prev"],
+            )
+        err = np.linalg.norm(np.asarray(x)[:n] - xstar) / np.linalg.norm(xstar)
+        print(
+            f"  SaP-{variant}: P={ndev*2} partitions  iters={float(its):5.2f}"
+            f"  relerr={err:.2e}"
+        )
+    print("distributed solve OK (preconditioner comms: neighbor ppermute only)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""SaP::TPU — split-and-parallelize linear solvers (Li, Serban, Negrut
+2015) rebuilt TPU-native, inside a multi-pod JAX training/inference
+framework.  See DESIGN.md for the system inventory."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,50 @@
+"""sap-solver -- the paper's own workload as a first-class arch.
+
+Dense banded linear solve A x = b (paper Sec. 4.1) run as a distributed
+SaP::TPU job: partitions flattened over every mesh axis, one (or more)
+partitions per chip, truncated-SPIKE preconditioner + BiCGStab(2).
+
+Shapes mirror the paper's experiments, scaled to a 256/512-chip mesh:
+  * dense_200k  -- N=200,000  K=200  (paper Table 4.1 / 4.2 setting)
+  * dense_1m    -- N=1,048,576 K=500 (paper Table 4.3 largest row)
+  * dense_4m    -- N=4,194,304 K=200 (beyond-paper scale-out cell)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    name: str
+    n: int
+    k: int
+    variant: str = "C"  # coupled (truncated SPIKE); "D" = decoupled
+    p_per_device: int = 1
+    d: float = 1.0  # diagonal dominance of the generated test matrix
+    tol: float = 1e-8
+    maxiter: int = 200
+    precond_dtype: str = "float32"  # bfloat16 on TPU = paper's mixed precision
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverShape:
+    name: str
+    n: int
+    k: int
+
+
+SOLVER_SHAPES = {
+    "dense_200k": SolverShape("dense_200k", 200_000, 200),
+    "dense_1m": SolverShape("dense_1m", 1_048_576, 500),
+    "dense_4m": SolverShape("dense_4m", 4_194_304, 200),
+}
+
+
+def full() -> SolverConfig:
+    return SolverConfig(name="sap-solver", n=200_000, k=200)
+
+
+def reduced() -> SolverConfig:
+    return SolverConfig(name="sap-solver-reduced", n=512, k=8, maxiter=50)

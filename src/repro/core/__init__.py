@@ -1,0 +1,48 @@
+"""SaP::TPU core: split-and-parallelize banded/sparse linear solvers.
+
+The paper's contribution (Li, Serban, Negrut 2015) as a composable JAX
+module: banded storage, block-tridiagonal factorization, truncated-SPIKE
+preconditioning, Krylov solvers, and the DB/CM reordering front end.
+"""
+
+from .banded import (
+    BlockTridiag,
+    band_matvec,
+    band_to_block_tridiag,
+    band_to_dense,
+    dense_to_band,
+    pad_banded,
+    padded_partition_size,
+    random_banded,
+    random_rhs,
+)
+from .block_lu import BTFactors, btf_ref, btf_ul_ref, bts_ref, gj_inverse
+from .krylov import KrylovResult, bicgstab2, cg
+from .sap import SaPOptions, SaPSolution, solve_banded, solve_sparse
+from .spike import SaPPreconditioner, build_preconditioner
+
+__all__ = [
+    "BlockTridiag",
+    "BTFactors",
+    "KrylovResult",
+    "SaPOptions",
+    "SaPPreconditioner",
+    "SaPSolution",
+    "band_matvec",
+    "band_to_block_tridiag",
+    "band_to_dense",
+    "bicgstab2",
+    "btf_ref",
+    "btf_ul_ref",
+    "bts_ref",
+    "build_preconditioner",
+    "cg",
+    "dense_to_band",
+    "gj_inverse",
+    "pad_banded",
+    "padded_partition_size",
+    "random_banded",
+    "random_rhs",
+    "solve_banded",
+    "solve_sparse",
+]

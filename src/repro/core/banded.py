@@ -1,0 +1,265 @@
+"""Banded-matrix storage utilities.
+
+Three representations are used throughout SaP::TPU:
+
+1. ``dense``        : plain (N, N) array (tests / tiny problems only).
+2. ``band``         : the paper's "tall and thin" storage, shape (N, 2K+1)
+                      with ``band[r, j] == A[r, r - K + j]``.  The diagonal
+                      lives in column K (paper Sec. 3.1).
+3. ``block-tridiag``: the TPU-native form.  Each of the P partitions is a
+                      block-tridiagonal matrix with (K x K) blocks, which
+                      turns the scalar "window sliding" GPU factorization of
+                      the paper into a chain of MXU-friendly (K x K) matmuls.
+                      Shapes: D (P, M, K, K) diagonal blocks,
+                              E (P, M, K, K) sub-diagonal  (E[:, 0] unused),
+                              F (P, M, K, K) super-diagonal (F[:, M-1] unused).
+
+The partition coupling blocks of the paper (B_i super- / C_i sub-coupling,
+each K x K) are extracted separately; they drive the spike computation.
+
+All functions are pure JAX (jnp) unless explicitly numpy-only helpers for
+test-matrix generation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# dense <-> band conversions
+# ---------------------------------------------------------------------------
+
+
+def dense_to_band(a: jax.Array, k: int) -> jax.Array:
+    """Convert a dense (N, N) banded matrix into (N, 2K+1) band storage."""
+    n = a.shape[0]
+    cols = jnp.arange(-k, k + 1)
+
+    def row(r):
+        idx = r + cols
+        valid = (idx >= 0) & (idx < n)
+        return jnp.where(valid, a[r, jnp.clip(idx, 0, n - 1)], 0.0)
+
+    return jax.vmap(row)(jnp.arange(n))
+
+
+def band_to_dense(band: jax.Array) -> jax.Array:
+    """Inverse of :func:`dense_to_band`."""
+    n, w = band.shape
+    k = (w - 1) // 2
+    out = jnp.zeros((n, n), band.dtype)
+    rows = jnp.arange(n)
+    for j in range(w):  # small loop over band width; unrolled at trace time
+        cols = rows - k + j
+        valid = (cols >= 0) & (cols < n)
+        out = out.at[rows, jnp.clip(cols, 0, n - 1)].add(
+            jnp.where(valid, band[:, j], 0.0)
+        )
+    return out
+
+
+def band_matvec(band: jax.Array, x: jax.Array) -> jax.Array:
+    """y = A @ x with A in band storage.  x: (N,) or (N, R)."""
+    n, w = band.shape
+    k = (w - 1) // 2
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    y = jnp.zeros((n, x.shape[1]), jnp.promote_types(band.dtype, x.dtype))
+    for j in range(w):
+        shift = j - k  # y[r] += band[r, j] * x[r + shift]
+        xs = jnp.roll(x, -shift, axis=0)
+        rows = jnp.arange(n) + shift
+        valid = ((rows >= 0) & (rows < n))[:, None]
+        y = y + jnp.where(valid, band[:, j : j + 1] * xs, 0.0)
+    return y[:, 0] if squeeze else y
+
+
+# ---------------------------------------------------------------------------
+# Partitioning (paper Sec. 3.1: first P_r partitions get floor(N/P)+1 rows)
+# ---------------------------------------------------------------------------
+
+
+def partition_sizes(n: int, p: int) -> np.ndarray:
+    base = n // p
+    rem = n - p * base
+    return np.asarray([base + 1 if i < rem else base for i in range(p)])
+
+
+def padded_partition_size(n: int, p: int, k: int) -> int:
+    """Uniform per-partition row count, padded so K | Ni (identity padding)."""
+    ni = -(-n // p)  # ceil
+    m = -(-ni // k)
+    return m * k
+
+
+def pad_banded(band: jax.Array, b: jax.Array, n_pad: int) -> Tuple[jax.Array, jax.Array]:
+    """Pad system with identity rows so the total size becomes ``n_pad``."""
+    n, w = band.shape
+    k = (w - 1) // 2
+    if n_pad == n:
+        return band, b
+    extra = n_pad - n
+    pad_rows = jnp.zeros((extra, w), band.dtype).at[:, k].set(1.0)
+    band_p = jnp.concatenate([band, pad_rows], axis=0)
+    if b.ndim == 1:
+        b_p = jnp.concatenate([b, jnp.zeros((extra,), b.dtype)])
+    else:
+        b_p = jnp.concatenate([b, jnp.zeros((extra, b.shape[1]), b.dtype)], axis=0)
+    return band_p, b_p
+
+
+# ---------------------------------------------------------------------------
+# band -> block tridiagonal (per partition)
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("d", "e", "f", "b_cpl", "c_cpl"),
+    meta_fields=("n",),
+)
+@dataclasses.dataclass
+class BlockTridiag:
+    """Block-tridiagonal form of the P partitions + coupling blocks.
+
+    d: (P, M, K, K)   diagonal blocks
+    e: (P, M, K, K)   sub-diagonal blocks   (e[:, 0] is zero / unused)
+    f: (P, M, K, K)   super-diagonal blocks (f[:, M-1] is zero / unused)
+    b_cpl: (P-1, K, K) super coupling block B_i  (rows: bottom of part i,
+                        cols: top of part i+1)
+    c_cpl: (P-1, K, K) sub coupling block C_{i+1} (rows: top of part i+1,
+                        cols: bottom of part i)
+    n: original (unpadded) system size
+    """
+
+    d: jax.Array
+    e: jax.Array
+    f: jax.Array
+    b_cpl: jax.Array
+    c_cpl: jax.Array
+    n: int
+
+    @property
+    def p(self) -> int:
+        return self.d.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.d.shape[1]
+
+    @property
+    def k(self) -> int:
+        return self.d.shape[2]
+
+    @property
+    def n_pad(self) -> int:
+        return self.p * self.m * self.k
+
+    def tree_flatten(self):  # pragma: no cover - convenience
+        return (self.d, self.e, self.f, self.b_cpl, self.c_cpl), self.n
+
+
+def band_to_block_tridiag(band: jax.Array, k: int, p: int) -> BlockTridiag:
+    """Split a banded system into P partitions of block-tridiagonal (K x K)."""
+    n = band.shape[0]
+    ni = padded_partition_size(n, p, k)
+    n_pad = ni * p
+    band_p, _ = pad_banded(band, jnp.zeros((n,), band.dtype), n_pad)
+    dense_rows = band_p  # (n_pad, 2k+1)
+    m = ni // k
+
+    # Scatter band rows into a per-row (3K) window aligned to block columns:
+    # row r (global) belongs to block row br = r // k, with offset o = r % k.
+    # Window covers columns [br*k - k, br*k + 2k).  Band column j maps to
+    # global col c = r - k + j  ->  window index  c - (br*k - k) = o + j.
+    w = 2 * k + 1
+    win = jnp.zeros((n_pad, 3 * k), band.dtype)
+    r = jnp.arange(n_pad)
+    o = r % k
+    for j in range(w):
+        c = r - k + j
+        valid = (c >= 0) & (c < n_pad)
+        win = win.at[r, o + j].set(jnp.where(valid, dense_rows[:, j], 0.0))
+
+    win = win.reshape(p, m, k, 3 * k)
+    e = win[:, :, :, 0:k]
+    d = win[:, :, :, k : 2 * k]
+    f = win[:, :, :, 2 * k : 3 * k]
+    # Zero out the cross-partition pieces: block row 0's sub-diag and block
+    # row M-1's super-diag belong to coupling blocks, not to the partition.
+    e = e.at[:, 0].set(0.0)
+    f = f.at[:, m - 1].set(0.0)
+
+    # Coupling blocks. B_i = A[part i bottom K rows, part i+1 top K cols]
+    # which is exactly win[f] of block row (i, M-1); C similarly.
+    win_full = win  # (p, m, k, 3k)
+    b_cpl = win_full[:-1, m - 1, :, 2 * k : 3 * k]  # (p-1, k, k)
+    c_cpl = win_full[1:, 0, :, 0:k]  # (p-1, k, k)
+    return BlockTridiag(d=d, e=e, f=f, b_cpl=b_cpl, c_cpl=c_cpl, n=n)
+
+
+def block_tridiag_to_dense(bt: BlockTridiag) -> jax.Array:
+    """Reassemble the full (padded) dense matrix (tests only)."""
+    p, m, k = bt.p, bt.m, bt.k
+    n = bt.n_pad
+    out = np.zeros((n, n), dtype=np.asarray(bt.d).dtype)
+    d, e, f = np.asarray(bt.d), np.asarray(bt.e), np.asarray(bt.f)
+    for i in range(p):
+        off = i * m * k
+        for j in range(m):
+            r0 = off + j * k
+            out[r0 : r0 + k, r0 : r0 + k] = d[i, j]
+            if j > 0:
+                out[r0 : r0 + k, r0 - k : r0] = e[i, j]
+            if j < m - 1:
+                out[r0 : r0 + k, r0 + k : r0 + 2 * k] = f[i, j]
+    b_cpl, c_cpl = np.asarray(bt.b_cpl), np.asarray(bt.c_cpl)
+    for i in range(p - 1):
+        rb = (i + 1) * m * k  # first row of partition i+1
+        out[rb - k : rb, rb : rb + k] = b_cpl[i]
+        out[rb : rb + k, rb - k : rb] = c_cpl[i]
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# Test-matrix generators (numpy; mirror the paper's experiments Sec. 4.1)
+# ---------------------------------------------------------------------------
+
+
+def random_banded(
+    n: int,
+    k: int,
+    d: float,
+    seed: int = 0,
+    dtype=np.float64,
+) -> np.ndarray:
+    """Random band-storage matrix with degree of diagonal dominance ``d``.
+
+    Off-diagonal entries are U(-1, 1); the diagonal is set so that
+    |a_ii| = d * sum_{j != i} |a_ij|  (paper Eq. 2.11, with equality).
+    Returns band storage (N, 2K+1).
+    """
+    rng = np.random.default_rng(seed)
+    band = rng.uniform(-1.0, 1.0, size=(n, 2 * k + 1)).astype(dtype)
+    # zero out-of-matrix corners
+    for j in range(2 * k + 1):
+        c = np.arange(n) - k + j
+        band[(c < 0) | (c >= n), j] = 0.0
+    off = np.abs(band).sum(axis=1) - np.abs(band[:, k])
+    sign = np.where(band[:, k] >= 0, 1.0, -1.0)
+    band[:, k] = sign * np.maximum(d * off, 1e-3)
+    return band
+
+
+def random_rhs(n: int, seed: int = 1, dtype=np.float64) -> np.ndarray:
+    """Paper Sec 4.3.3: entries on a parabola from 1.0 to ~400 back to 1.0."""
+    t = np.linspace(-1.0, 1.0, n)
+    return (400.0 * (1.0 - t * t) + 1.0).astype(dtype)

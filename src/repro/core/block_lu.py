@@ -1,0 +1,191 @@
+"""Block-tridiagonal LU / UL factorization -- pure-jnp reference.
+
+This is the TPU adaptation of the paper's dense-banded LU (Sec. 3.1): the
+scalar "window sliding" factorization (a GPU warp/thread-block mechanism)
+is re-cast as a *block*-tridiagonal factorization with (K x K) blocks, so
+every update step is a (K x K) matmul that maps onto the MXU.  For a banded
+matrix with half-bandwidth K this block factorization is exact.
+
+    A_i = L_i @ U_i,     L_i unit block-lower-bidiagonal (blocks L_j),
+                         U_i block-upper-bidiagonal (diag S_j, super F_j)
+
+    S_0 = D_0
+    L_j = E_j @ inv(S_{j-1})          j = 1..M-1
+    S_j = D_j - L_j @ F_{j-1}
+
+Pivoting is replaced by *pivot boosting* (paper Sec. 2.2, following
+PARDISO): inside the Gauss-Jordan inversion of each S_j, any pivot smaller
+than ``boost_eps * max|S_j|`` is boosted to that threshold.
+
+The Pallas kernels in ``repro.kernels`` implement exactly these recurrences;
+this module doubles as their oracle (re-exported by ``kernels/ref.py``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BOOST = 1e-10
+
+
+# ---------------------------------------------------------------------------
+# Gauss-Jordan inverse with pivot boosting (K x K)
+# ---------------------------------------------------------------------------
+
+
+def gj_inverse(a: jax.Array, boost_eps: float = DEFAULT_BOOST) -> jax.Array:
+    """Inverse of a (K, K) block via Gauss-Jordan with pivot boosting."""
+    k = a.shape[-1]
+    dtype = a.dtype
+    scale = jnp.maximum(jnp.max(jnp.abs(a)), jnp.asarray(1e-30, dtype))
+    aug = jnp.concatenate([a, jnp.eye(k, dtype=dtype)], axis=1)  # (K, 2K)
+
+    def step(t, aug):
+        piv = aug[t, t]
+        thr = boost_eps * scale
+        piv = jnp.where(
+            jnp.abs(piv) < thr, jnp.where(piv >= 0, thr, -thr), piv
+        )
+        # normalize pivot row; treat aug[t, t] as the (possibly boosted) piv,
+        # i.e. we factor the perturbed block A + dA (paper Sec. 2.2)
+        row = (aug[t] / piv).at[t].set(1.0)
+        col = aug[:, t]
+        aug = aug - jnp.outer(col, row)
+        aug = aug.at[t].set(row)
+        return aug
+
+    aug = jax.lax.fori_loop(0, k, step, aug)
+    return aug[:, k:]
+
+
+def gj_solve(a: jax.Array, b: jax.Array, boost_eps: float = DEFAULT_BOOST) -> jax.Array:
+    """Solve (K,K) @ x = (K,R) via the boosted inverse (small systems)."""
+    return gj_inverse(a, boost_eps) @ b
+
+
+# ---------------------------------------------------------------------------
+# Factorization
+# ---------------------------------------------------------------------------
+
+
+class BTFactors(NamedTuple):
+    """Factors of the block-diagonal matrix D = diag(A_1..A_P).
+
+    sinv: (P, M, K, K)  inverses of the block pivots S_j
+    l:    (P, M, K, K)  unit-lower block multipliers (l[:, 0] zero)
+    f:    (P, M, K, K)  super-diagonal blocks (copied from input)
+    """
+
+    sinv: jax.Array
+    l: jax.Array
+    f: jax.Array
+
+
+@partial(jax.jit, static_argnames=("boost_eps",))
+def btf_ref(
+    d: jax.Array, e: jax.Array, f: jax.Array, boost_eps: float = DEFAULT_BOOST
+) -> BTFactors:
+    """Block-tridiagonal factorization of every partition (vmap over P)."""
+
+    def one_partition(dp, ep, fp):
+        m, k, _ = dp.shape
+
+        def step(carry, blocks):
+            sinv_prev = carry
+            dj, ej, fj_prev = blocks
+            lj = ej @ sinv_prev
+            sj = dj - lj @ fj_prev
+            sinvj = gj_inverse(sj, boost_eps)
+            return sinvj, (sinvj, lj)
+
+        s0 = dp[0]
+        sinv0 = gj_inverse(s0, boost_eps)
+        # blocks j = 1..M-1 paired with F_{j-1}
+        xs = (dp[1:], ep[1:], fp[:-1])
+        _, (sinv_rest, l_rest) = jax.lax.scan(step, sinv0, xs)
+        sinv = jnp.concatenate([sinv0[None], sinv_rest], axis=0)
+        l = jnp.concatenate([jnp.zeros_like(l_rest[:1]), l_rest], axis=0)
+        return sinv, l
+
+    sinv, l = jax.vmap(one_partition)(d, e, f)
+    return BTFactors(sinv=sinv, l=l, f=f)
+
+
+# ---------------------------------------------------------------------------
+# Solve  D @ x = b  (independent per partition)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def bts_ref(factors: BTFactors, b: jax.Array) -> jax.Array:
+    """Solve with the factors.  b: (P, M, K, R) -> x: (P, M, K, R)."""
+
+    sinv, l, f = factors
+
+    def one_partition(sinvp, lp, fp, bp):
+        # forward:  y_j = b_j - L_j y_{j-1}
+        def fwd(y_prev, blocks):
+            lj, bj = blocks
+            yj = bj - lj @ y_prev
+            return yj, yj
+
+        y0 = bp[0]
+        _, y_rest = jax.lax.scan(fwd, y0, (lp[1:], bp[1:]))
+        y = jnp.concatenate([y0[None], y_rest], axis=0)
+
+        # backward: x_{M-1} = Sinv y_{M-1};  x_j = Sinv_j (y_j - F_j x_{j+1})
+        def bwd(x_next, blocks):
+            sinvj, fj, yj = blocks
+            xj = sinvj @ (yj - fj @ x_next)
+            return xj, xj
+
+        x_last = sinvp[-1] @ y[-1]
+        _, x_rest = jax.lax.scan(
+            bwd, x_last, (sinvp[:-1], fp[:-1], y[:-1]), reverse=True
+        )
+        return jnp.concatenate([x_rest, x_last[None]], axis=0)
+
+    return jax.vmap(one_partition)(sinv, l, f, b)
+
+
+# ---------------------------------------------------------------------------
+# UL factorization via reversal (for the left-spike top blocks, Sec. 2.1)
+# ---------------------------------------------------------------------------
+
+
+def flip_block_tridiag(
+    d: jax.Array, e: jax.Array, f: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Blocks of J A J^T (row+col reversal) per partition.
+
+    Reversal maps block (r, c) -> (M-1-r, M-1-c) and flips each block on
+    both axes.  An LU factorization of the reversed matrix is a UL
+    factorization of the original (paper Sec. 2.1: the alternative to
+    computing the whole left spike W_i).
+    """
+
+    def flip2(x):
+        return x[..., ::-1, ::-1]
+
+    d_r = flip2(d[:, ::-1])
+    # sub-diag of reversed row j is the flipped super-diag of row M-1-j
+    e_r = flip2(f[:, ::-1])
+    f_r = flip2(e[:, ::-1])
+    # fix unused slots
+    m = d.shape[1]
+    e_r = e_r.at[:, 0].set(0.0)
+    f_r = f_r.at[:, m - 1].set(0.0)
+    return d_r, e_r, f_r
+
+
+@partial(jax.jit, static_argnames=("boost_eps",))
+def btf_ul_ref(
+    d: jax.Array, e: jax.Array, f: jax.Array, boost_eps: float = DEFAULT_BOOST
+) -> BTFactors:
+    """UL factors == LU factors of the reversed partition."""
+    d_r, e_r, f_r = flip_block_tridiag(d, e, f)
+    return btf_ref(d_r, e_r, f_r, boost_eps)

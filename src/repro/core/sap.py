@@ -1,0 +1,210 @@
+"""SaP::TPU high-level solver API.
+
+``solve_banded``  : dense banded systems (paper Sec. 2.1 / 4.1).
+``solve_sparse``  : sparse systems via DB + CM reordering, drop-off and the
+                    sparse->dense-banded fallback (paper Sec. 2.2 / 4.3).
+
+The solver is a Krylov method (BiCGStab(2), or CG for SPD systems)
+preconditioned by the split-and-parallelize factorization:
+
+  * variant "D" (decoupled): block-diagonal solve only.
+  * variant "C" (coupled):   truncated-SPIKE correction (Sec. 2.1).
+
+Semantics mirror the paper: the Krylov matvec always uses the *original*
+(reordered) matrix; drop-off and the banded approximation only affect the
+preconditioner.  Mixed precision (Sec. 3.1): the preconditioner is factored
+and applied in ``precond_dtype`` (float32 default, bfloat16 on TPU) while
+the outer Krylov iteration runs in the dtype of the inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import reorder as reorder_mod
+from .banded import (
+    band_matvec,
+    band_to_block_tridiag,
+    pad_banded,
+    padded_partition_size,
+)
+from .block_lu import DEFAULT_BOOST
+from .krylov import KrylovResult, bicgstab2, cg
+from .spike import build_preconditioner
+
+
+@dataclasses.dataclass
+class SaPOptions:
+    p: int = 8  # number of partitions
+    variant: str = "C"  # "C" coupled | "D" decoupled
+    tol: float = 1e-10
+    maxiter: int = 500
+    boost_eps: float = DEFAULT_BOOST
+    precond_dtype: str = "float32"
+    use_cg: bool = False  # CG for SPD systems
+    # sparse front-end (Sec. 2.2)
+    use_db: bool = True  # diagonal-boosting reordering
+    use_cm: bool = True  # bandwidth-reducing reordering
+    third_stage: bool = False  # per-partition CM (Sec. 4.3.2)
+    drop_tol: float = 0.0  # element drop-off fraction (0 = keep all)
+
+
+@dataclasses.dataclass
+class SaPSolution:
+    x: np.ndarray | jax.Array
+    iterations: float
+    resnorm: float
+    converged: bool
+    k: int  # half bandwidth used by the preconditioner
+    info: dict
+
+
+def _precond_dtype(opts: SaPOptions):
+    return {"float32": jnp.float32, "float64": jnp.float64, "bfloat16": jnp.bfloat16}[
+        opts.precond_dtype
+    ]
+
+
+def _krylov_solve(
+    matvec: Callable[[jax.Array], jax.Array],
+    b_pad: jax.Array,
+    band_pc: jax.Array,
+    k: int,
+    opts: SaPOptions,
+):
+    """Factor the SaP preconditioner from ``band_pc`` and run Krylov."""
+    bt = band_to_block_tridiag(band_pc, max(k, 1), opts.p)
+    pc = build_preconditioner(
+        bt,
+        variant=opts.variant,
+        boost_eps=opts.boost_eps,
+        precond_dtype=_precond_dtype(opts),
+    )
+    n_pad_pc = bt.n_pad
+
+    def precond(r):
+        rp = jnp.concatenate(
+            [r, jnp.zeros((n_pad_pc - r.shape[0],), r.dtype)]
+        ) if r.shape[0] != n_pad_pc else r
+        z = pc.apply(rp)
+        return z[: r.shape[0]]
+
+    solver = cg if opts.use_cg else bicgstab2
+    res: KrylovResult = solver(
+        matvec, b_pad, precond=precond, tol=opts.tol, maxiter=opts.maxiter
+    )
+    return res, pc
+
+
+def solve_banded(
+    band: jax.Array,
+    b: jax.Array,
+    opts: Optional[SaPOptions] = None,
+) -> SaPSolution:
+    """Solve a dense banded system given in (N, 2K+1) band storage."""
+    opts = opts or SaPOptions()
+    band = jnp.asarray(band)
+    b = jnp.asarray(b)
+    n, w = band.shape
+    k = (w - 1) // 2
+
+    res, pc = _krylov_solve(
+        lambda x: band_matvec(band, x), b, band, k, opts
+    )
+    return SaPSolution(
+        x=res.x,
+        iterations=float(res.iterations),
+        resnorm=float(res.resnorm),
+        converged=bool(res.converged),
+        k=k,
+        info={"variant": pc.variant, "p": opts.p},
+    )
+
+
+def _csr_matvec_fn(csr) -> Callable[[jax.Array], jax.Array]:
+    rows = jnp.asarray(csr.row_ids())
+    cols = jnp.asarray(csr.indices)
+    data = jnp.asarray(csr.data, dtype=jnp.float32)
+    n = csr.n
+
+    def matvec(x):
+        return jax.ops.segment_sum(
+            data.astype(x.dtype) * x[cols], rows, num_segments=n
+        )
+
+    return matvec
+
+
+def solve_sparse(
+    a_csr,
+    b: np.ndarray,
+    opts: Optional[SaPOptions] = None,
+) -> SaPSolution:
+    """Solve a sparse system (CSR-like) via the reorder + banded pipeline.
+
+    Pipeline (paper Fig. 3.1): DB reordering (T_DB) -> CM reordering (T_CM)
+    -> optional drop-off (T_Drop) -> banded assembly (T_Asmbl) -> SaP
+    factorization + Krylov (T_LU .. T_Kry) -> un-permute.
+    """
+    opts = opts or SaPOptions()
+    info: dict = {}
+
+    csr = reorder_mod.to_csr(a_csr)
+    n = csr.n
+    b = np.asarray(b, dtype=np.float64)
+
+    # --- stage 1: diagonal boosting (row permutation) ----------------------
+    if opts.use_db:
+        row_perm = reorder_mod.diagonal_boosting(csr)
+        csr = reorder_mod.permute_rows(csr, row_perm)
+        b_r = b[row_perm]
+        info["db"] = True
+    else:
+        b_r = b
+        info["db"] = False
+
+    # --- stage 2: CM bandwidth reduction (symmetric permutation) -----------
+    if opts.use_cm:
+        sym_perm = reorder_mod.cuthill_mckee(reorder_mod.symmetrize(csr))
+        csr = reorder_mod.permute_symmetric(csr, sym_perm)
+        b_r = b_r[sym_perm]
+        info["cm"] = True
+    else:
+        sym_perm = np.arange(n)
+        info["cm"] = False
+
+    k_full = reorder_mod.half_bandwidth(csr)
+    info["k_after_reorder"] = k_full
+
+    # --- stage 3: optional drop-off (preconditioner only) ------------------
+    csr_pc = csr
+    k = k_full
+    if opts.drop_tol > 0.0:
+        csr_pc, k = reorder_mod.drop_off(csr, opts.drop_tol)
+        info["k_after_drop"] = k
+    k = max(k, 1)
+
+    # --- stage 4: banded assembly + solve -----------------------------------
+    band_pc = reorder_mod.csr_to_band(csr_pc, k)
+    dtype = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+    b_j = jnp.asarray(b_r, dtype=dtype)
+    matvec = _csr_matvec_fn(csr)
+    res, pc = _krylov_solve(matvec, b_j, jnp.asarray(band_pc, dtype), k, opts)
+
+    # --- un-permute ----------------------------------------------------------
+    x_r = np.asarray(res.x)
+    x = np.empty_like(x_r)
+    x[sym_perm] = x_r
+    return SaPSolution(
+        x=x,
+        iterations=float(res.iterations),
+        resnorm=float(res.resnorm),
+        converged=bool(res.converged),
+        k=k,
+        info={**info, "variant": pc.variant, "p": opts.p},
+    )

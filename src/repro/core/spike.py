@@ -1,0 +1,184 @@
+"""SPIKE machinery: truncated spikes, reduced system, SaP preconditioner.
+
+Implements paper Sec. 2.1:
+
+  * right-spike bottom blocks   V_i^(b) = Sinv_i[M-1] @ B_i          (2.2a)
+  * left-spike top blocks       W_{i+1}^(t) via the UL factorization (2.2c)
+  * the truncated reduced system (2.9):
+        Rbar_i               = I - W_{i+1}^(t) V_i^(b)
+        Rbar_i xt_{i+1}^(t)  = g_{i+1}^(t) - W_{i+1}^(t) g_i^(b)
+        xt_i^(b)             = g_i^(b) - V_i^(b) xt_{i+1}^(t)
+  * the final decoupled solves (2.10).
+
+Two preconditioner variants (paper Sec. 2.1.1):
+  * SaP-D  ("decoupled"): z = D^{-1} r, one block solve.
+  * SaP-C  ("coupled"):   block solve + truncated-spike correction +
+                          second block solve.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .banded import BlockTridiag
+from .block_lu import (
+    DEFAULT_BOOST,
+    BTFactors,
+    btf_ref,
+    btf_ul_ref,
+    bts_ref,
+    gj_inverse,
+)
+
+
+def _flip_rows(x: jax.Array) -> jax.Array:
+    return x[..., ::-1, :]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("lu", "b_cpl", "c_cpl", "v_bot", "w_top", "rbar_inv"),
+    meta_fields=("variant", "p", "m", "k", "impl"),
+)
+@dataclasses.dataclass
+class SaPPreconditioner:
+    """Factored SaP preconditioner (variant 'C' coupled or 'D' decoupled).
+
+    All factor arrays may be stored in a lower precision than the Krylov
+    iteration (paper Sec. 3.1 "Mixed Precision Strategy").
+    """
+
+    variant: str  # "C" | "D"
+    lu: BTFactors  # factors of diag(A_1..A_P)
+    b_cpl: jax.Array  # (P-1, K, K)
+    c_cpl: jax.Array  # (P-1, K, K)
+    v_bot: Optional[jax.Array]  # (P-1, K, K)  V_i^(b)
+    w_top: Optional[jax.Array]  # (P-1, K, K)  W_{i+1}^(t)
+    rbar_inv: Optional[jax.Array]  # (P-1, K, K)  inv(I - W V)
+    p: int
+    m: int
+    k: int
+    impl: str = "jnp"  # kernel dispatch: "jnp" | "interpret" | "pallas"
+
+    def apply(self, r: jax.Array) -> jax.Array:
+        """Apply M^{-1} to a (padded) flat residual of length P*M*K."""
+        dtype = self.lu.sinv.dtype
+        rb = r.astype(dtype).reshape(self.p, self.m, self.k, -1)
+        if self.variant == "D":
+            z = _bts(self.lu, rb, self.impl)
+            return z.reshape(r.shape).astype(r.dtype)
+        z = _apply_coupled(self, rb)
+        return z.reshape(r.shape).astype(r.dtype)
+
+
+def _bts(factors, b, impl):
+    """Solve through the kernel dispatch layer (lazy import: no cycles)."""
+    if impl == "jnp":
+        return bts_ref(factors, b)
+    from repro.kernels import ops as kops
+
+    return kops.block_tridiag_solve(factors, b, impl=impl)
+
+
+def _btf(d, e, f, boost_eps, impl):
+    if impl == "jnp":
+        return btf_ref(d, e, f, boost_eps)
+    from repro.kernels import ops as kops
+
+    return kops.block_tridiag_factor(d, e, f, boost_eps, impl=impl)
+
+
+@partial(jax.jit, static_argnames=())
+def _apply_coupled(pc: SaPPreconditioner, rb: jax.Array) -> jax.Array:
+    # 1) g = D^{-1} r
+    g = _bts(pc.lu, rb, pc.impl)  # (P, M, K, R)
+    g_top = g[:, 0]  # (P, K, R)
+    g_bot = g[:, -1]  # (P, K, R)
+
+    # 2) reduced-system correction per interface i = 0..P-2   (eq. 2.9)
+    rhs = g_top[1:] - pc.w_top @ g_bot[:-1]  # (P-1, K, R)
+    xt_top = pc.rbar_inv @ rhs  # xt_{i+1}^(t)
+    xt_bot = g_bot[:-1] - pc.v_bot @ xt_top  # xt_i^(b)
+
+    # 3) final solves (eq. 2.10): subtract coupling contributions
+    top_corr = pc.c_cpl @ xt_bot  # into partitions 1..P-1, top block
+    bot_corr = pc.b_cpl @ xt_top  # into partitions 0..P-2, bottom block
+    rb2 = rb
+    rb2 = rb2.at[1:, 0].add(-top_corr)
+    rb2 = rb2.at[:-1, -1].add(-bot_corr)
+    return _bts(pc.lu, rb2, pc.impl)
+
+
+def build_preconditioner(
+    bt: BlockTridiag,
+    variant: str = "C",
+    boost_eps: float = DEFAULT_BOOST,
+    precond_dtype=jnp.float32,
+    impl: str = "jnp",
+    spike_mode: str = "ul",
+) -> SaPPreconditioner:
+    """Factor the SaP preconditioner from block-tridiagonal partitions.
+
+    spike_mode:
+      * "ul"   -- paper Sec. 2.1 fast path: V^(b) from the bottom of the LU
+                  factors, W^(t) from a UL factorization (top only).
+      * "full" -- compute the *entire* spikes by full solves and take the
+                  needed blocks.  This is the paper's third-stage-reordering
+                  path (Sec. 2.2.1: per-partition reordering "renders the UL
+                  factorization superfluous" and mandates whole spikes).
+    """
+    if variant not in ("C", "D"):
+        raise ValueError(f"unknown SaP variant {variant!r}")
+    if spike_mode not in ("ul", "full"):
+        raise ValueError(f"unknown spike_mode {spike_mode!r}")
+    d = bt.d.astype(precond_dtype)
+    e = bt.e.astype(precond_dtype)
+    f = bt.f.astype(precond_dtype)
+    b_cpl = bt.b_cpl.astype(precond_dtype)
+    c_cpl = bt.c_cpl.astype(precond_dtype)
+
+    lu = _btf(d, e, f, boost_eps, impl)
+
+    v_bot = w_top = rbar_inv = None
+    if variant == "C" and bt.p > 1:
+        if spike_mode == "ul":
+            # V_i^(b) = Sinv_i[M-1] @ B_i  for i = 0..P-2
+            v_bot = lu.sinv[:-1, -1] @ b_cpl
+            # W_{i+1}^(t) from the UL factorization of partitions 1..P-1
+            ul = btf_ul_ref(d, e, f, boost_eps)
+            w_top = _flip_rows(ul.sinv[1:, -1] @ _flip_rows(c_cpl))
+        else:
+            # whole right spikes: A_i V_i = [0;..;B_i], keep bottom blocks
+            rhs_b = jnp.zeros((bt.p, bt.m, bt.k, bt.k), precond_dtype)
+            rhs_b = rhs_b.at[:-1, -1].set(b_cpl)
+            v_full = _bts(lu, rhs_b, impl)
+            v_bot = v_full[:-1, -1]
+            # whole left spikes: A_{i+1} W_{i+1} = [C_{i+1};0;..], keep tops
+            rhs_c = jnp.zeros((bt.p, bt.m, bt.k, bt.k), precond_dtype)
+            rhs_c = rhs_c.at[1:, 0].set(c_cpl)
+            w_full = _bts(lu, rhs_c, impl)
+            w_top = w_full[1:, 0]
+        eye = jnp.eye(bt.k, dtype=precond_dtype)
+        rbar = eye - w_top @ v_bot
+        rbar_inv = jax.vmap(lambda a: gj_inverse(a, boost_eps))(rbar)
+    elif variant == "C":
+        variant = "D"  # single partition: coupled == decoupled
+
+    return SaPPreconditioner(
+        variant=variant,
+        lu=lu,
+        b_cpl=b_cpl,
+        c_cpl=c_cpl,
+        v_bot=v_bot,
+        w_top=w_top,
+        rbar_inv=rbar_inv,
+        p=bt.p,
+        m=bt.m,
+        k=bt.k,
+        impl=impl,
+    )

@@ -1,0 +1,1 @@
+from .pipeline import BinTokenDataset, DataConfig, SyntheticLM, make_source  # noqa: F401

@@ -1,0 +1,123 @@
+"""Jit'd public wrappers for the Pallas kernels with implementation dispatch.
+
+``impl`` selects the execution path:
+  * "jnp"       -- pure-jnp reference (default on CPU; identical math)
+  * "interpret" -- Pallas kernel executed in interpret mode (CPU-validated)
+  * "pallas"    -- compiled Pallas TPU kernel (the production path)
+
+The default comes from the env var ``REPRO_KERNEL_IMPL`` and falls back to
+"jnp" when no TPU is present, "pallas" otherwise, so the same model code
+runs everywhere.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_lu import DEFAULT_BOOST, BTFactors
+
+from . import ref
+from .btf import btf_pallas
+from .bts import bts_pallas
+from .ssd_chunk import ssd_pallas
+from .wkv_chunk import wkv6_pallas
+
+
+def default_impl() -> str:
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
+    try:
+        if jax.devices()[0].platform == "tpu":
+            return "pallas"
+    except Exception:  # pragma: no cover
+        pass
+    return "jnp"
+
+
+def _interpret(impl: str) -> bool:
+    return impl != "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Block-tridiagonal factor / solve
+# ---------------------------------------------------------------------------
+
+
+def block_tridiag_factor(
+    d: jax.Array,
+    e: jax.Array,
+    f: jax.Array,
+    boost_eps: float = DEFAULT_BOOST,
+    impl: str | None = None,
+) -> BTFactors:
+    impl = impl or default_impl()
+    if impl == "jnp":
+        return ref.btf_ref(d, e, f, boost_eps)
+    sinv, l = btf_pallas(d, e, f, boost_eps, interpret=_interpret(impl))
+    return BTFactors(sinv=sinv, l=l, f=f)
+
+
+def block_tridiag_solve(
+    factors: BTFactors, b: jax.Array, impl: str | None = None
+) -> jax.Array:
+    impl = impl or default_impl()
+    if impl == "jnp":
+        return ref.bts_ref(factors, b)
+    return bts_pallas(
+        factors.sinv, factors.l, factors.f, b, interpret=_interpret(impl)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sequence-mixing recurrences (flattened over batch x heads)
+# ---------------------------------------------------------------------------
+
+
+def wkv6(
+    r: jax.Array,  # (B, H, T, D)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    u: jax.Array,  # (H, D)
+    state: jax.Array,  # (B, H, D, D)
+    chunk: int = 64,
+    impl: str | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    impl = impl or default_impl()
+    if impl == "jnp":
+        return ref.wkv6_chunked_ref(r, k, v, logw, u, state, chunk)
+    bsz, h, t, d = r.shape
+    flat = lambda x: x.reshape(bsz * h, *x.shape[2:])
+    u_full = jnp.broadcast_to(u, (bsz,) + u.shape).reshape(bsz * h, d)
+    o, s_out = wkv6_pallas(
+        flat(r), flat(k), flat(v), flat(logw), u_full,
+        state.reshape(bsz * h, d, d), chunk=chunk, interpret=_interpret(impl),
+    )
+    return o.reshape(bsz, h, t, d), s_out.reshape(bsz, h, d, d)
+
+
+def ssd(
+    x: jax.Array,  # (B, H, T, P)
+    b: jax.Array,  # (B, H, T, N)
+    c: jax.Array,  # (B, H, T, N)
+    loga: jax.Array,  # (B, H, T)
+    state: jax.Array,  # (B, H, N, P)
+    chunk: int = 64,
+    impl: str | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    impl = impl or default_impl()
+    if impl == "jnp":
+        return ref.ssd_chunked_ref(x, b, c, loga, state, chunk)
+    bsz, h, t, p = x.shape
+    n = b.shape[-1]
+    flat = lambda a: a.reshape(bsz * h, *a.shape[2:])
+    y, s_out = ssd_pallas(
+        flat(x), flat(b), flat(c), flat(loga),
+        state.reshape(bsz * h, n, p), chunk=chunk, interpret=_interpret(impl),
+    )
+    return y.reshape(bsz, h, t, p), s_out.reshape(bsz, h, n, p)

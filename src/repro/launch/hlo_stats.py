@@ -1,0 +1,305 @@
+"""Loop-aware FLOP / HBM-traffic / collective analysis of HLO text.
+
+Why not ``compiled.cost_analysis()``?  Two measured deficiencies (see
+EXPERIMENTS.md "methodology"):
+
+  1. while-loop bodies are counted ONCE, not trip_count times -- a model
+     with ``lax.scan`` over 24..56 layers under-counts by that factor;
+  2. "bytes accessed" sums every operand of every instruction pre-fusion,
+     over-counting HBM traffic for anything XLA fuses, and counts whole
+     arrays for slice/update ops that touch only a sliver.
+
+This module re-derives the three roofline inputs from the
+post-optimization HLO text with a computation-graph walk:
+
+  * multipliers: ENTRY = 1; while bodies x known_trip_count (from XLA's
+    backend_config, falling back to the largest constant in the loop
+    condition); calls/fusions/branches inherit the caller's multiplier.
+  * flops: dots = 2 x numel(result) x prod(lhs contracting dims);
+    elementwise/reduce = numel; everything inside fusion computations is
+    counted (fusions themselves are not).
+  * HBM bytes: counted per *top-level* op (fusion = one kernel):
+    operands + result, with slice-like special cases (dynamic-slice /
+    gather read only the slice; in-place dynamic-update-slice fusions
+    write only the update).
+  * collectives: operand bytes per op, times the multiplier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\(")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLED_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_INT_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_NO_TRAFFIC = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+_SLICE_READ = {"dynamic-slice", "gather", "slice"}
+_SLICE_WRITE = {"dynamic-update-slice", "scatter"}
+
+
+def _parse_type(type_str: str) -> Tuple[int, List[List[int]]]:
+    """-> (total bytes, list of dims-lists)."""
+    total = 0
+    shapes = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        ds = [int(d) for d in dims.split(",") if d] if dims else []
+        n = 1
+        for d in ds:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append(ds)
+    return total, shapes
+
+
+def _numel(type_str: str) -> int:
+    n_total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        n_total += n
+    return n_total
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+def _parse_computations(hlo_text: str):
+    comps: Dict[str, List[_Instr]] = {}
+    current: Optional[str] = None
+    entry: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and (
+            line.startswith("%") or line.startswith("ENTRY")
+        ):
+            is_entry = line.startswith("ENTRY")
+            tok = line.split()[1] if is_entry else line
+            name = tok.split("(")[0].strip().lstrip("%").rstrip()
+            current = name
+            comps[current] = []
+            if is_entry:
+                entry = current
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _DEF_RE.match(line)
+        if m:
+            comps[current].append(_Instr(m.group(1), m.group(2), m.group(3), line))
+    return comps, entry
+
+
+def _operand_names(line: str, opcode: str) -> List[str]:
+    idx = line.find(opcode + "(")
+    if idx < 0:
+        return []
+    args = line[idx + len(opcode) + 1 :]
+    depth, end = 1, 0
+    for end, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    args = args[:end]
+    names = []
+    depth = 0
+    cur = []
+    for ch in args + ",":
+        if ch == "," and depth == 0:
+            piece = "".join(cur).strip()
+            cur = []
+            if piece:
+                names.append(piece.split(" ")[-1].lstrip("%"))
+            continue
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        cur.append(ch)
+    return names
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    hbm_bytes: float
+    coll: Dict[str, dict]
+
+    @property
+    def coll_bytes(self) -> float:
+        return float(sum(v["bytes"] for v in self.coll.values()))
+
+
+def analyze_hlo(hlo_text: str) -> HloStats:
+    comps, entry = _parse_computations(hlo_text)
+
+    # global symbol table: name -> (bytes, shapes)
+    table: Dict[str, Tuple[int, List[List[int]]]] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            table[ins.name] = _parse_type(ins.type_str)
+
+    # which computations are fusion bodies (their bytes are internal)
+    fusion_bodies = set()
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.opcode == "fusion":
+                m = _CALLED_RE.search(ins.line)
+                if m:
+                    fusion_bodies.add(m.group(1))
+
+    # multipliers over the call graph
+    mult: Dict[str, float] = {entry: 1.0} if entry else {}
+    order = [entry] if entry else list(comps)
+    seen = set(order)
+    while order:
+        cur = order.pop(0)
+        for ins in comps.get(cur, ()):
+            wm = _WHILE_RE.search(ins.line)
+            callees: List[Tuple[str, float]] = []
+            if wm:
+                cond, body = wm.groups()
+                tm = _TRIP_RE.search(ins.line)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    trips = 1
+                    for c_ins in comps.get(cond, ()):
+                        for mm in _INT_CONST_RE.finditer(c_ins.line):
+                            trips = max(trips, int(mm.group(1)))
+                callees.append((body, trips))
+            else:
+                bm = _BRANCHES_RE.search(ins.line)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        callees.append((b.strip().lstrip("%"), 1.0))
+                else:
+                    cm = _CALLED_RE.search(ins.line)
+                    if cm and ins.opcode not in ("all-reduce", "reduce",
+                                                 "reduce-scatter", "scatter",
+                                                 "reduce-window", "sort",
+                                                 "select-and-scatter"):
+                        callees.append((cm.group(1), 1.0))
+            for callee, factor in callees:
+                if callee in comps:
+                    mult[callee] = mult.get(callee, 0.0) + mult.get(cur, 0.0) * factor
+                    if callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+
+    flops = 0.0
+    hbm = 0.0
+    coll: Dict[str, dict] = {}
+
+    for cname, instrs in comps.items():
+        w = mult.get(cname, 0.0)
+        if w <= 0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for ins in instrs:
+            op = ins.opcode
+            # ---- flops -----------------------------------------------------
+            if op in ("dot", "convolution"):
+                res_n = _numel(ins.type_str)
+                k = 1
+                cm = _CONTRACT_RE.search(ins.line)
+                if cm:
+                    ops = _operand_names(ins.line, op)
+                    if ops and ops[0] in table:
+                        lhs_shapes = table[ops[0]][1]
+                        if lhs_shapes:
+                            dims = lhs_shapes[0]
+                            for ci in cm.group(1).split(","):
+                                if ci and int(ci) < len(dims):
+                                    k *= dims[int(ci)]
+                flops += w * 2.0 * res_n * k
+            elif op == "reduce":
+                ops = _operand_names(ins.line, op)
+                n = table.get(ops[0], (0, []))[0] if ops else 0
+                flops += w * n  # ~1 flop per input element (bytes->elems ok)
+            elif op not in _NO_TRAFFIC and op != "fusion":
+                flops += w * _numel(ins.type_str)
+
+            # ---- collectives -----------------------------------------------
+            for c in _COLLECTIVES:
+                if op == c or op == c + "-start":
+                    ops = _operand_names(ins.line, op)
+                    b = sum(table.get(o, (0, []))[0] for o in ops)
+                    ent = coll.setdefault(c, {"bytes": 0, "count": 0})
+                    ent["bytes"] += int(w * b)
+                    ent["count"] += int(w)
+                    break
+
+            # ---- HBM traffic (top-level kernels only) -----------------------
+            if in_fusion or op in _NO_TRAFFIC:
+                continue
+            res_b = _parse_type(ins.type_str)[0]
+            ops = _operand_names(ins.line, op)
+            op_bytes = [table.get(o, (0, []))[0] for o in ops]
+            if op in _SLICE_READ:
+                traffic = 2 * res_b
+            elif op in _SLICE_WRITE:
+                upd = op_bytes[1] if len(op_bytes) > 1 else res_b
+                traffic = 2 * upd
+            elif op == "fusion":
+                body = None
+                m = _CALLED_RE.search(ins.line)
+                if m:
+                    body = m.group(1)
+                has_dus = body in comps and any(
+                    i.opcode in _SLICE_WRITE for i in comps[body]
+                )
+                if has_dus:
+                    # in-place update kernel: aliased big operand + result
+                    # are not (re)written; traffic ~ the small operands
+                    small = [b for b in op_bytes if b != res_b]
+                    traffic = 2 * sum(small) if small else 2 * res_b
+                else:
+                    traffic = sum(op_bytes) + res_b
+            else:
+                traffic = sum(op_bytes) + res_b
+            hbm += w * traffic
+
+    return HloStats(flops=flops, hbm_bytes=hbm, coll=coll)

@@ -1,0 +1,325 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh) cell, all in seconds:
+
+  compute    = HLO_FLOPs_per_device   / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device   / HBM_bandwidth_per_chip
+  collective = collective_bytes_per_device / ICI_link_bandwidth
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the SPMD-partitioned
+per-device module).  Collective bytes are *not* in cost_analysis: we parse
+the post-optimization HLO text, build a symbol table of instruction
+result sizes, and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (values given by the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)\("
+)
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string; tuples summed."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLED_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_INT_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _parse_computations(hlo_text: str):
+    """Split HLO text into computations; returns ({name: [lines]}, entry)."""
+    comps: Dict[str, list] = {}
+    current = None
+    entry = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and (
+            line.startswith("%") or line.startswith("ENTRY")
+        ):
+            is_entry = line.startswith("ENTRY")
+            tok = line.split()[1] if is_entry else line.split("(")[0].strip()
+            name = tok.split("(")[0].strip().lstrip("%").rstrip()
+            current = name
+            comps[current] = []
+            if is_entry:
+                entry = current
+            continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+            else:
+                comps[current].append(line)
+    return comps, entry
+
+
+def _trip_count(line: str, cond_lines) -> int:
+    """Trip count of a while: prefer XLA's known_trip_count backend config,
+    fall back to the largest integer constant in the loop condition
+    (scans compare the counter against the length)."""
+    m = _TRIP_RE.search(line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    for ln in cond_lines:
+        for mm in _INT_CONST_RE.finditer(ln):
+            best = max(best, int(mm.group(1)))
+    return best
+
+
+def _collective_bytes_in(lines, sizes) -> Dict[str, dict]:
+    stats: Dict[str, dict] = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        _, _, opcode = m.groups()
+        base = None
+        for c in _COLLECTIVES:
+            if opcode == c or opcode == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        idx = line.find(opcode + "(")
+        args = line[idx + len(opcode) + 1 :]
+        depth, end = 1, 0
+        for end, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        args = args[:end]
+        op_bytes = 0
+        for piece in _split_top(args):
+            piece = piece.strip()
+            tb = _type_bytes(piece)
+            if tb:
+                op_bytes += tb
+            else:
+                ref = piece.lstrip("%").split(" ")[-1].lstrip("%")
+                op_bytes += sizes.get(ref, 0)
+        ent = stats.setdefault(base, {"bytes": 0, "count": 0})
+        ent["bytes"] += op_bytes
+        ent["count"] += 1
+    return stats
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, dict]:
+    """Collective operand bytes from post-optimization HLO text.
+
+    Loop-aware: collectives inside ``while`` bodies (scanned layers!) are
+    multiplied by the loop trip count, propagated through nested loops and
+    called computations -- a static parse would undercount a scanned
+    24-layer model by 24x.
+    """
+    comps, entry = _parse_computations(hlo_text)
+    # symbol table of result sizes across all computations (names unique)
+    sizes: Dict[str, int] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                sizes[m.group(1)] = _type_bytes(m.group(2))
+
+    # multiplier propagation over the call graph
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry is None:  # fallback: flat scan
+        return _collective_bytes_in(hlo_text.splitlines(), sizes)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    while order:
+        cur = order.pop(0)
+        for line in comps.get(cur, ()):
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.groups()
+                trips = _trip_count(line, comps.get(cond, ()))
+                if body in comps:
+                    mult[body] = mult.get(body, 0.0) + mult[cur] * trips
+                    if body not in seen:
+                        seen.add(body)
+                        order.append(body)
+                continue
+            bm = _BRANCHES_RE.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b in comps:
+                        mult[b] = mult.get(b, 0.0) + mult[cur]
+                        if b not in seen:
+                            seen.add(b)
+                            order.append(b)
+                continue
+            cm = _CALLED_RE.search(line)
+            if cm and "fusion(" not in line:
+                callee = cm.group(1)
+                if callee in comps:
+                    mult[callee] = mult.get(callee, 0.0) + mult[cur]
+                    if callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+
+    total: Dict[str, dict] = {}
+    for name, lines in comps.items():
+        w = mult.get(name, 0.0)
+        if w <= 0:
+            continue
+        local = _collective_bytes_in(lines, sizes)
+        for op, ent in local.items():
+            agg = total.setdefault(op, {"bytes": 0, "count": 0})
+            agg["bytes"] += int(ent["bytes"] * w)
+            agg["count"] += int(ent["count"] * w)
+    return total
+
+
+def _split_top(s: str):
+    depth = 0
+    cur = []
+    for ch in s:
+        if ch == "," and depth == 0:
+            yield "".join(cur)
+            cur = []
+            continue
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        cur.append(ch)
+    if cur:
+        yield "".join(cur)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device HLO flops
+    bytes_accessed: float  # per-device
+    coll_bytes: float  # per-device
+    coll_detail: dict
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    cost: dict,
+    hlo_text: str,
+    chips: int,
+    model_flops_global: float,
+) -> Roofline:
+    """Roofline terms from the loop-aware HLO analyzer (hlo_stats); the XLA
+    cost_analysis dict is kept only as a cross-reference (it counts while
+    bodies once -- see hlo_stats docstring)."""
+    from .hlo_stats import analyze_hlo
+
+    st = analyze_hlo(hlo_text)
+    flops = float(st.flops)
+    bytes_acc = float(st.hbm_bytes)
+    coll = st.coll
+    cbytes = float(st.coll_bytes)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    coll_s = cbytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mf_per_dev = model_flops_global / chips
+    useful = mf_per_dev / flops if flops > 0 else 0.0
+    return Roofline(
+        flops=flops,
+        bytes_accessed=bytes_acc,
+        coll_bytes=cbytes,
+        coll_detail=coll,
+        chips=chips,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops_global,
+        useful_ratio=useful,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (analytic "useful flops") per shape kind
+# ---------------------------------------------------------------------------
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE: routed top-k + shared experts
+    only; hybrid: the shared attention block is touched once per
+    application, i.e. n_layers/attn_every times)."""
+    total = cfg.params_count()
+    if cfg.n_experts:
+        mlp_one = cfg.d_model * cfg.d_ff * (3 if cfg.gated_mlp else 2)
+        n_blocks = cfg.n_layers
+        routed_all = cfg.n_experts * mlp_one * n_blocks
+        routed_active = cfg.top_k * mlp_one * n_blocks
+        return total - routed_all + routed_active
+    if cfg.family == "hybrid" and cfg.attn_every:
+        d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+        attn = d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) + hd * cfg.n_heads * d
+        shared = attn + 3 * d * f
+        n_apps = cfg.n_layers // cfg.attn_every
+        return total + (n_apps - 1) * shared
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """6 N D for training, 2 N D for inference forward passes."""
+    n_act = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_act * tokens

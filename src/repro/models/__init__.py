@@ -1,0 +1,13 @@
+"""Model substrate: composable JAX model definitions for all assigned
+architectures (dense / MoE / RWKV6 / Mamba2-hybrid / enc-dec families)."""
+
+from .api import SHAPES, ModelConfig, ShapeSpec, dp_axes, get_family, supports_shape
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "ShapeSpec",
+    "dp_axes",
+    "get_family",
+    "supports_shape",
+]

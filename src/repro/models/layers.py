@@ -1,0 +1,234 @@
+"""Shared neural-net layers: norms, RoPE, attention, MLPs, embeddings.
+
+Pure-function style: parameters are dict pytrees, every layer is
+``f(params, x, cfg-ish kwargs) -> y``.  Attention is a chunked
+online-softmax ("flash") formulation in plain jnp so that 32k-token
+prefill never materializes a (T, T) score matrix -- the working set per
+step is (block_q, block_k), which is what the TPU kernel would tile into
+VMEM.  Grouped-query attention and sliding windows are supported
+everywhere (training, prefill and decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dtype)
+
+
+def group_norm(x: jax.Array, w: jax.Array, b: jax.Array, groups: int, eps: float = 1e-5):
+    """GroupNorm over the channel axis (used by RWKV6 head ln_x)."""
+    dtype = x.dtype
+    *lead, c = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, groups, c // groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = ((x - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, c)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, D); positions: (..., T) or (T,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rot.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def mlp(params: dict, x: jax.Array, act: str = "silu", gated: bool = True):
+    """SwiGLU-style (gated) or plain 2-layer MLP.
+
+    gated:   params = {wi: (D, 2F) fused gate|up, wo: (F, D)}
+    plain:   params = {wi: (D, F),              wo: (F, D)}
+    """
+    wi = params["wi"].astype(x.dtype)
+    wo = params["wo"].astype(x.dtype)
+    h = x @ wi
+    if gated:
+        g, up = jnp.split(h, 2, axis=-1)
+        h = _act(act, g) * up
+    else:
+        h = _act(act, h)
+    return h @ wo
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (chunked online softmax), GQA + causal/SWA masks
+# ---------------------------------------------------------------------------
+
+
+NEG_INF = -1e30  # finite: -inf - -inf = NaN breaks online softmax for
+# (q-row, kv-block) pairs that are fully masked (e.g. sliding windows)
+
+
+def _mask_bias(
+    q_pos: jax.Array,  # (Tq,)
+    k_pos: jax.Array,  # (Tk,)
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), jnp.bool_)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Tq, Dh)
+    k: jax.Array,  # (B, Hk, Tk, Dh)
+    v: jax.Array,  # (B, Hk, Tk, Dh)
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_k: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Chunked online-softmax attention; never materializes (Tq, Tk).
+
+    GQA: Hq must be a multiple of Hk; query heads are grouped.
+    ``q_offset``: absolute position of q[0] (for cached decode/prefill).
+    """
+    b, hq, tq, dh = q.shape
+    hk, tk = k.shape[1], k.shape[2]
+    g = hq // hk
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qg = q.reshape(b, hk, g, tq, dh)
+
+    nblk = -(-tk // block_k)
+    pad = nblk * block_k - tk
+    if pad:
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        kp, vp = k, v
+    kb = kp.reshape(b, hk, nblk, block_k, dh)
+    vb = vp.reshape(b, hk, nblk, block_k, dh)
+
+    q_pos = q_offset + jnp.arange(tq)
+
+    def kv_block(carry, blk):
+        m_run, l_run, acc = carry
+        kj, vj, j = blk
+        k_pos = j * block_k + jnp.arange(block_k)
+        valid = k_pos < tk
+        bias = _mask_bias(q_pos, k_pos, causal, window)
+        bias = jnp.where(valid[None, :], bias, NEG_INF)
+        # scores: (B, Hk, G, Tq, Ck)
+        s = jnp.einsum("bhgtd,bhcd->bhgtc", qg.astype(jnp.float32), kj.astype(jnp.float32))
+        s = s * scale + bias
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgtc,bhcd->bhgtd", p, vj.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hk, g, tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, tq), jnp.float32)
+    a0 = jnp.zeros((b, hk, g, tq, dh), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        kv_block,
+        (m0, l0, a0),
+        (
+            jnp.moveaxis(kb, 2, 0),
+            jnp.moveaxis(vb, 2, 0),
+            jnp.arange(nblk),
+        ),
+    )
+    out = acc / jnp.maximum(l_f[..., None], 1e-30)
+    return out.reshape(b, hq, tq, dh).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, Hq, 1, Dh)
+    k_cache: jax.Array,  # (B, Hk, S, Dh)
+    v_cache: jax.Array,  # (B, Hk, S, Dh)
+    cur_len: jax.Array,  # scalar or (B,) number of valid cache entries
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffered) KV cache."""
+    b, hq, _, dh = q.shape
+    hk, s = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, hk, g, dh)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.einsum(
+        "bhgd,bhsd->bhgs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    pos = jnp.arange(s)
+    cur = jnp.broadcast_to(jnp.asarray(cur_len), (b,))
+    valid = pos[None, :] < cur[:, None]
+    if window is not None:
+        valid &= pos[None, :] >= cur[:, None] - window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, 1, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def split_rngs(rng, n):
+    return list(jax.random.split(rng, n))

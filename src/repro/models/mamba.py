@@ -1,0 +1,381 @@
+"""Mamba-2 / Zamba2 hybrid family.
+
+Zamba2 structure (simplified but shape-faithful, see DESIGN.md): a backbone
+of Mamba-2 (SSD) blocks with one *shared* transformer block (attention +
+MLP, single set of weights) applied every ``cfg.attn_every`` layers.
+Layers are grouped into segments of ``attn_every`` so the whole model is
+two nested ``lax.scan``s -- no per-layer branching in the HLO.
+
+The SSD recurrence is solved with the split-and-parallelize chunked scan
+(``repro.kernels.ssd_chunk``) -- the same SaP pattern as the WKV kernel,
+but with scalar per-head decay making it MXU-friendly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops as kops
+
+from .api import ModelConfig, ShapeSpec, dp_axes, dp_axes_for
+from .layers import apply_rope, decode_attention, flash_attention, mlp, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    din = cfg.ssm_expand * cfg.d_model
+    h = din // cfg.ssm_head_dim
+    return din, h, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def _n_segments(cfg: ModelConfig):
+    if cfg.attn_every and cfg.attn_every > 0:
+        assert cfg.n_layers % cfg.attn_every == 0
+        return cfg.n_layers // cfg.attn_every, cfg.attn_every
+    return 1, cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_mamba_block(cfg: ModelConfig, rng) -> dict:
+    d = cfg.d_model
+    din, h, n, hd = _dims(cfg)
+    conv_dim = din + 2 * n
+    ks = jax.random.split(rng, 6)
+    nrm = jax.random.normal
+    return {
+        "ln": jnp.ones((d,), jnp.float32),
+        "in_proj": nrm(ks[0], (d, 2 * din + 2 * n + h), jnp.float32) / jnp.sqrt(d),
+        "conv_w": nrm(ks[1], (cfg.conv_width, conv_dim), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": jnp.ones((din,), jnp.float32),
+        "out_proj": nrm(ks[2], (din, d), jnp.float32) / jnp.sqrt(din),
+    }
+
+
+def _init_shared_attn(cfg: ModelConfig, rng) -> dict:
+    d = cfg.d_model
+    hd = cfg.head_dim
+    ks = jax.random.split(rng, 6)
+    nrm = jax.random.normal
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "wq": nrm(ks[0], (d, cfg.n_heads * hd), jnp.float32) / jnp.sqrt(d),
+        "wk": nrm(ks[1], (d, cfg.n_kv_heads * hd), jnp.float32) / jnp.sqrt(d),
+        "wv": nrm(ks[2], (d, cfg.n_kv_heads * hd), jnp.float32) / jnp.sqrt(d),
+        "wo": nrm(ks[3], (cfg.n_heads * hd, d), jnp.float32)
+        / jnp.sqrt(cfg.n_heads * hd),
+        "mlp": {
+            "wi": nrm(ks[4], (d, 2 * cfg.d_ff), jnp.float32) / jnp.sqrt(d),
+            "wo": nrm(ks[5], (cfg.d_ff, d), jnp.float32) / jnp.sqrt(cfg.d_ff),
+        },
+    }
+
+
+def init(cfg: ModelConfig, rng) -> dict:
+    k_e, k_b, k_s, k_h = jax.random.split(rng, 4)
+    blocks = jax.vmap(lambda r: _init_mamba_block(cfg, r))(
+        jax.random.split(k_b, cfg.n_layers)
+    )
+    vp = cfg.vocab_padded
+    return {
+        "embed": jax.random.normal(k_e, (vp, cfg.d_model), jnp.float32) * 0.02,
+        "blocks": blocks,
+        "shared_attn": _init_shared_attn(cfg, k_s),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": jax.random.normal(k_h, (cfg.d_model, vp), jnp.float32)
+        * 0.02,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (sequence form)
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(cfg, proj):
+    din, h, n, hd = _dims(cfg)
+    z, xs, b, c, dt = jnp.split(proj, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], -1)
+    return z, xs, b, c, dt
+
+
+def _mamba_fwd(cfg: ModelConfig, p: dict, x: jax.Array, state: dict):
+    """x: (B, T, D).  state: {conv: (B, W-1, conv_dim), ssm: (B, H, N, P)}."""
+    bsz, t, d = x.shape
+    din, h, n, hd = _dims(cfg)
+    res = x
+    x = rms_norm(x, p["ln"])
+    proj = x @ p["in_proj"].astype(x.dtype)  # (B, T, 2din+2n+h)
+    z, xs, bmat, cmat, dt = _split_proj(cfg, proj)
+
+    # depthwise causal conv over [xs|B|C] with carried state
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)  # (B, T, conv_dim)
+    w = cfg.conv_width
+    hist = jnp.concatenate([state["conv"].astype(x.dtype), xbc], axis=1)
+    conv = sum(
+        hist[:, i : i + t] * p["conv_w"][i].astype(x.dtype) for i in range(w)
+    ) + p["conv_b"].astype(x.dtype)
+    conv = jax.nn.silu(conv)
+    conv_state_out = hist[:, t : t + w - 1] if t >= w - 1 else jnp.concatenate(
+        [state["conv"][:, t:], xbc], axis=1
+    )
+    xs, bmat, cmat = jnp.split(conv, [din, din + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, T, H)
+    loga = -jnp.exp(p["a_log"])[None, None, :] * dt  # (B, T, H) <= 0
+    sdt = jnp.bfloat16 if cfg.scan_dtype == "bfloat16" else jnp.float32
+    xh = xs.reshape(bsz, t, h, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    xh = (xh * dt.transpose(0, 2, 1)[..., None]).astype(sdt)  # fold dt in
+    bh = jnp.broadcast_to(bmat[:, None].astype(sdt), (bsz, h, t, n))
+    ch = jnp.broadcast_to(cmat[:, None].astype(sdt), (bsz, h, t, n))
+    la = loga.transpose(0, 2, 1).astype(jnp.float32)  # (B, H, T)
+
+    y, ssm_out = kops.ssd(
+        xh, bh, ch, la, state["ssm"].astype(jnp.float32),
+        chunk=min(cfg.ssm_chunk, t), impl=cfg.kernel_impl,
+    )
+    y = y.astype(jnp.float32) + p["d_skip"][None, :, None, None] * xh.astype(
+        jnp.float32
+    )  # skip connection
+    y = y.transpose(0, 2, 1, 3).reshape(bsz, t, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    state_out = {"conv": conv_state_out.astype(state["conv"].dtype),
+                 "ssm": ssm_out.astype(state["ssm"].dtype)}
+    return res + out, state_out
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block
+# ---------------------------------------------------------------------------
+
+
+def _shared_attn_fwd(cfg: ModelConfig, p: dict, x: jax.Array, positions):
+    bsz, t, d = x.shape
+    hd = cfg.head_dim
+    h1 = rms_norm(x, p["ln1"])
+    q = (h1 @ p["wq"].astype(x.dtype)).reshape(bsz, t, cfg.n_heads, hd)
+    k = (h1 @ p["wk"].astype(x.dtype)).reshape(bsz, t, cfg.n_kv_heads, hd)
+    v = (h1 @ p["wv"].astype(x.dtype)).reshape(bsz, t, cfg.n_kv_heads, hd)
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    o = flash_attention(q, k, v.transpose(0, 2, 1, 3), causal=True,
+                        block_k=cfg.attn_block_k)
+    o = o.transpose(0, 2, 1, 3).reshape(bsz, t, cfg.n_heads * hd)
+    x = x + o @ p["wo"].astype(x.dtype)
+    h2 = rms_norm(x, p["ln2"])
+    return x + mlp(p["mlp"], h2, cfg.act, True)
+
+
+# ---------------------------------------------------------------------------
+# Model-level API
+# ---------------------------------------------------------------------------
+
+
+def _zero_state(cfg: ModelConfig, batch: int):
+    din, h, n, hd = _dims(cfg)
+    conv_dim = din + 2 * n
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, conv_dim),
+                          jnp.float32),
+        "ssm": jnp.zeros((cfg.n_layers, batch, h, n, hd), jnp.float32),
+    }
+
+
+def _seg_tree(cfg, tree):
+    ns, sl = _n_segments(cfg)
+    return jax.tree.map(lambda a: a.reshape(ns, sl, *a.shape[1:]), tree)
+
+
+def _unseg_tree(cfg, tree):
+    return jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]), tree)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, state=None):
+    cdt = cfg.cdtype
+    bsz, t = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    state = state if state is not None else _zero_state(cfg, bsz)
+    positions = jnp.arange(t)
+    ns, sl = _n_segments(cfg)
+    blocks_seg = _seg_tree(cfg, params["blocks"])
+    state_seg = _seg_tree(cfg, state)
+
+    def layer_body(x, scanned):
+        p_blk, st = scanned
+        x, st_out = _mamba_fwd(cfg, p_blk, x, st)
+        return x, st_out
+
+    if cfg.remat != "none":
+        layer_body = jax.checkpoint(layer_body)
+
+    def segment_body(x, scanned):
+        p_seg, st_seg = scanned
+        x, st_out = jax.lax.scan(layer_body, x, (p_seg, st_seg))
+        if cfg.attn_every:
+            x = _shared_attn_fwd(cfg, params["shared_attn"], x, positions)
+        return x, st_out
+
+    x, state_out = jax.lax.scan(segment_body, x, (blocks_seg, state_seg))
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"].astype(cdt)
+    return logits, _unseg_tree(cfg, state_out)
+
+
+def loss(cfg: ModelConfig, params: dict, batch: dict, rng=None):
+    tokens = batch["tokens"]
+    logits, _ = forward(cfg, params, tokens)
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1, : cfg.vocab].astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    nll = (lse - picked).mean()
+    return nll, {"nll": nll, "aux": jnp.zeros(())}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, prefilled: int = 0):
+    cache = _zero_state(cfg, batch)
+    if cfg.attn_every:
+        ns, _ = _n_segments(cfg)
+        hd = cfg.head_dim
+        s = min(max_len, cfg.window) if cfg.window else max_len
+        cache["attn_k"] = jnp.zeros((ns, batch, cfg.n_kv_heads, s, hd), cfg.cdtype)
+        cache["attn_v"] = jnp.zeros((ns, batch, cfg.n_kv_heads, s, hd), cfg.cdtype)
+        cache["len"] = jnp.asarray(prefilled, jnp.int32)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array):
+    cdt = cfg.cdtype
+    bsz = tokens.shape[0]
+    hd = cfg.head_dim
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(cdt)[:, None, :]
+    cur = cache.get("len", jnp.asarray(0, jnp.int32))
+    positions = cur[None].astype(jnp.int32)
+    ns, sl = _n_segments(cfg)
+    blocks_seg = _seg_tree(cfg, params["blocks"])
+    mstate_seg = _seg_tree(cfg, {"conv": cache["conv"], "ssm": cache["ssm"]})
+
+    def layer_body(x, scanned):
+        p_blk, st = scanned
+        x, st_out = _mamba_fwd(cfg, p_blk, x, st)
+        return x, st_out
+
+    def segment_body(x, scanned):
+        p_seg, st_seg, k_c, v_c = scanned
+        x, st_out = jax.lax.scan(layer_body, x, (p_seg, st_seg))
+        if not cfg.attn_every:
+            return x, (st_out, k_c, v_c)
+        p = params["shared_attn"]
+        s_cache = k_c.shape[2]
+        slot = cur % s_cache
+        h1 = rms_norm(x, p["ln1"])
+        q = (h1 @ p["wq"].astype(cdt)).reshape(bsz, 1, cfg.n_heads, hd)
+        k = (h1 @ p["wk"].astype(cdt)).reshape(bsz, 1, cfg.n_kv_heads, hd)
+        v = (h1 @ p["wv"].astype(cdt)).reshape(bsz, 1, cfg.n_kv_heads, hd)
+        q = apply_rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+        k = apply_rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+        v = v.transpose(0, 2, 1, 3)
+        k_c = jax.lax.dynamic_update_slice(k_c, k.astype(k_c.dtype), (0, 0, slot, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v.astype(v_c.dtype), (0, 0, slot, 0))
+        o = decode_attention(q, k_c, v_c, jnp.minimum(cur + 1, s_cache))
+        o = o.transpose(0, 2, 1, 3).reshape(bsz, 1, cfg.n_heads * hd)
+        x = x + o @ p["wo"].astype(cdt)
+        h2 = rms_norm(x, p["ln2"])
+        x = x + mlp(p["mlp"], h2, cfg.act, True)
+        return x, (st_out, k_c, v_c)
+
+    if cfg.attn_every:
+        scanned = (blocks_seg, mstate_seg, cache["attn_k"], cache["attn_v"])
+    else:
+        dummy = jnp.zeros((ns, 1, 1, 1, 1), cdt)
+        scanned = (blocks_seg, mstate_seg, dummy, dummy)
+    x, (mstate_out, k_out, v_out) = jax.lax.scan(segment_body, x, scanned)
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"].astype(cdt))[:, 0, : cfg.vocab]
+    new_cache = dict(_unseg_tree(cfg, mstate_out))
+    if cfg.attn_every:
+        new_cache["attn_k"] = k_out
+        new_cache["attn_v"] = v_out
+        new_cache["len"] = cur + 1
+    return logits, new_cache
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    din, h, n, hd_s = _dims(cfg)
+    conv_dim = din + 2 * n
+    cache = {
+        "conv": jax.ShapeDtypeStruct(
+            (cfg.n_layers, b, cfg.conv_width - 1, conv_dim), jnp.float32
+        ),
+        "ssm": jax.ShapeDtypeStruct((cfg.n_layers, b, h, n, hd_s), jnp.float32),
+    }
+    if cfg.attn_every:
+        ns, _ = _n_segments(cfg)
+        sc = min(s, cfg.window) if cfg.window else s
+        kv = jax.ShapeDtypeStruct((ns, b, cfg.n_kv_heads, sc, cfg.head_dim), cfg.cdtype)
+        cache["attn_k"] = kv
+        cache["attn_v"] = kv
+        cache["len"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32), "cache": cache}
+
+
+def param_pspecs(cfg: ModelConfig, mesh) -> dict:
+    blk = {
+        "ln": P(None, None),
+        "in_proj": P(None, None, "model"),
+        "conv_w": P(None, None, "model"),
+        "conv_b": P(None, "model"),
+        "a_log": P(None, None),
+        "dt_bias": P(None, None),
+        "d_skip": P(None, None),
+        "out_norm": P(None, "model"),
+        "out_proj": P(None, "model", None),
+    }
+    shared = {
+        "ln1": P(None),
+        "ln2": P(None),
+        "wq": P(None, "model"),
+        "wk": P(None, "model"),
+        "wv": P(None, "model"),
+        "wo": P("model", None),
+        "mlp": {"wi": P(None, "model"), "wo": P("model", None)},
+    }
+    return {
+        "embed": P("model", None),
+        "blocks": blk,
+        "shared_attn": shared,
+        "final_norm": P(None),
+        "lm_head": P(None, "model"),
+    }
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict:
+    dp = dp_axes_for(mesh, shape.global_batch)
+    if shape.kind in ("train", "prefill"):
+        return {"tokens": P(dp, None)}
+    cache = {
+        "conv": P(None, dp, None, "model"),
+        "ssm": P(None, dp, "model", None, None),
+    }
+    if cfg.attn_every:
+        model_size = mesh.shape.get("model", 1)
+        if cfg.n_kv_heads % model_size == 0:
+            kv = P(None, dp, "model", None, None)
+        else:
+            kv = P(None, dp, None, None, None)
+        cache["attn_k"] = kv
+        cache["attn_v"] = kv
+        cache["len"] = P()
+    return {"tokens": P(dp, None), "cache": cache}

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity, shared experts.
+
+GShard-style dense dispatch *within token groups*: tokens are split into
+groups of ``cfg.moe_group``; inside each group they are one-hot scattered
+into per-expert capacity buffers with einsums, so the whole layer is SPMD-
+shardable with pjit (expert axis on "model" for EP, or expert-hidden axis
+for TP -- ``ModelConfig.expert_sharding``).  Grouping bounds the dispatch
+tensor to  tokens x group x top_k x capacity_factor  elements instead of
+the quadratic-in-tokens ungrouped form.
+
+Supports DeepSeek-MoE fine-grained routing (64 routed + 2 shared, top-6)
+and Mixtral (8 routed, top-2).  Aux losses: Switch-style load-balance +
+router z-loss, returned for accumulation across layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .api import ModelConfig
+from .layers import _act
+
+
+def _positions_in_expert(expert_idx: jax.Array, n_experts: int) -> jax.Array:
+    """Rank of each routed slot within its expert, order-preserving.
+    expert_idx: (N,) -> (N,) ranks."""
+    onehot = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=0) - 1
+    return jnp.take_along_axis(ranks, expert_idx[:, None], axis=1)[:, 0]
+
+
+def moe_mlp(cfg: ModelConfig, params: dict, x: jax.Array):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    params:
+      router   : (D, E)
+      experts  : {wi: (E, D, 2F or F), wo: (E, F, D)}
+      shared   : {wi: (D, s*2F), wo: (s*F, D)}        (optional)
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tokens = b * s
+    group = min(cfg.moe_group, tokens)
+    ng = tokens // group
+    assert ng * group == tokens, f"tokens={tokens} not divisible by group={group}"
+    xg = x.reshape(ng, group, d)
+
+    # ---- routing (computed in f32) -----------------------------------------
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (NG, G, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (NG, G, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses ----------------------------------------------------------
+    onehot_e = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (NG, G, k, E)
+    frac = onehot_e.sum(axis=(0, 1, 2)) / (tokens * k)
+    mean_prob = probs.mean(axis=(0, 1))
+    lb_loss = e * jnp.sum(frac * mean_prob)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = cfg.router_aux_coef * lb_loss + 1e-3 * z_loss
+
+    # ---- capacity + positions (per group) ------------------------------------
+    cap = int(max(1, round(group * k * cfg.capacity_factor / e)))
+    pos = jax.vmap(lambda idx: _positions_in_expert(idx.reshape(-1), e))(
+        gate_idx
+    )  # (NG, G*k)
+    pos = pos.reshape(ng, group, k)
+    keep = (pos < cap).astype(jnp.float32)
+    pos_c = jnp.where(pos < cap, pos, 0)
+    onehot_c = jax.nn.one_hot(pos_c, cap, dtype=jnp.float32)  # (NG, G, k, C)
+
+    cdt = cfg.cdtype
+    disp = jnp.einsum("gtke,gtkc,gtk->gtec", onehot_e, onehot_c, keep).astype(cdt)
+    combine = jnp.einsum(
+        "gtke,gtkc,gtk->gtec", onehot_e, onehot_c, keep * gate_vals
+    ).astype(cdt)
+
+    # ---- expert compute --------------------------------------------------------
+    wi = params["experts"]["wi"].astype(cdt)  # (E, D, 2F|F)
+    wo = params["experts"]["wo"].astype(cdt)  # (E, F, D)
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xg.astype(cdt))
+    h = jnp.einsum("gecd,edf->gecf", xe, wi)
+    if cfg.gated_mlp:
+        gte, up = jnp.split(h, 2, axis=-1)
+        h = _act(cfg.act, gte) * up
+    ye = jnp.einsum("gecf,efd->gecd", h, wo)  # (NG, E, C, D)
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)
+
+    # ---- shared (always-on) experts ----------------------------------------------
+    if cfg.n_shared_experts > 0:
+        wi_s = params["shared"]["wi"].astype(cdt)
+        wo_s = params["shared"]["wo"].astype(cdt)
+        hs = jnp.einsum("gtd,dh->gth", xg.astype(cdt), wi_s)
+        if cfg.gated_mlp:
+            g2, up2 = jnp.split(hs, 2, axis=-1)
+            hs = _act(cfg.act, g2) * up2
+        y = y + jnp.einsum("gth,hd->gtd", hs, wo_s)
+
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def init_moe(cfg: ModelConfig, rng, dtype=jnp.float32) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k_r, k_i, k_o, k_si, k_so = jax.random.split(rng, 5)
+    wi_cols = 2 * f if cfg.gated_mlp else f
+    params = {
+        "router": jax.random.normal(k_r, (d, e), dtype) * 0.02,
+        "experts": {
+            "wi": jax.random.normal(k_i, (e, d, wi_cols), dtype) / jnp.sqrt(d),
+            "wo": jax.random.normal(k_o, (e, f, d), dtype) / jnp.sqrt(f),
+        },
+    }
+    if cfg.n_shared_experts > 0:
+        fs = f * cfg.n_shared_experts
+        params["shared"] = {
+            "wi": jax.random.normal(k_si, (d, 2 * fs if cfg.gated_mlp else fs), dtype)
+            / jnp.sqrt(d),
+            "wo": jax.random.normal(k_so, (fs, d), dtype) / jnp.sqrt(fs),
+        }
+    return params

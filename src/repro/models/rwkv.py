@@ -1,0 +1,294 @@
+"""RWKV6 ("Finch") family: attention-free LM with data-dependent decay.
+
+The WKV recurrence is the repo's flagship internal consumer of the paper's
+technique: it is a block-bidiagonal linear system solved with the
+split-and-parallelize chunked scan (``repro.kernels.wkv_chunk``) -- see
+DESIGN.md "SaP-scan".  Faithful RWKV6 structure: data-dependent token-shift
+(ddlerp with a small LoRA), data-dependent per-channel decay
+w = exp(-exp(w0 + lora(x))), bonus term u, grouped head LayerNorm, gated
+output; ReLU^2 channel mixing.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops as kops
+
+from .api import ModelConfig, ShapeSpec, dp_axes, dp_axes_for
+from .layers import group_norm, rms_norm
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ModelConfig, rng) -> dict:
+    d, f, lr = cfg.d_model, cfg.d_ff, cfg.rwkv_lora
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    ks = jax.random.split(rng, 16)
+    n = jax.random.normal
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "att": {
+            # ddlerp mixing coefficients + LoRA (5 targets: w, k, v, r, g)
+            "x_maa": jnp.zeros((d,), jnp.float32),
+            "maa": jnp.zeros((5, d), jnp.float32),
+            "maa_w1": n(ks[0], (d, 5 * lr), jnp.float32) * 0.01,
+            "maa_w2": n(ks[1], (5, lr, d), jnp.float32) * 0.01,
+            # data-dependent decay
+            "w0": jnp.full((d,), -4.0, jnp.float32),
+            "wd1": n(ks[2], (d, lr), jnp.float32) * 0.01,
+            "wd2": n(ks[3], (lr, d), jnp.float32) * 0.01,
+            "u": n(ks[4], (h, hd), jnp.float32) * 0.1,  # "time_faaaa"
+            "wr": n(ks[5], (d, d), jnp.float32) / jnp.sqrt(d),
+            "wk": n(ks[6], (d, d), jnp.float32) / jnp.sqrt(d),
+            "wv": n(ks[7], (d, d), jnp.float32) / jnp.sqrt(d),
+            "wg": n(ks[8], (d, d), jnp.float32) / jnp.sqrt(d),
+            "wo": n(ks[9], (d, d), jnp.float32) / jnp.sqrt(d),
+            "ln_x_w": jnp.ones((d,), jnp.float32),
+            "ln_x_b": jnp.zeros((d,), jnp.float32),
+        },
+        "ffn": {
+            "k_maa": jnp.zeros((d,), jnp.float32),
+            "r_maa": jnp.zeros((d,), jnp.float32),
+            "wk": n(ks[10], (d, f), jnp.float32) / jnp.sqrt(d),
+            "wv": n(ks[11], (f, d), jnp.float32) / jnp.sqrt(f),
+            "wr": n(ks[12], (d, d), jnp.float32) / jnp.sqrt(d),
+        },
+    }
+
+
+def init(cfg: ModelConfig, rng) -> dict:
+    k_e, k_b, k_h = jax.random.split(rng, 3)
+    blocks = jax.vmap(lambda r: _init_block(cfg, r))(
+        jax.random.split(k_b, cfg.n_layers)
+    )
+    vp = cfg.vocab_padded
+    return {
+        "embed": jax.random.normal(k_e, (vp, cfg.d_model), jnp.float32) * 0.02,
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": jax.random.normal(k_h, (cfg.d_model, vp), jnp.float32)
+        * 0.02,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block forward (sequence form)
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(p_att, x, xx):
+    """RWKV6 data-dependent token-shift: 5 mixed variants of x (w,k,v,r,g)."""
+    sx = xx - x  # (B, T, D)
+    xbase = x + sx * p_att["x_maa"].astype(x.dtype)
+    lo = jnp.tanh(xbase @ p_att["maa_w1"].astype(x.dtype))  # (B, T, 5*lr)
+    b, t, _ = lo.shape
+    lo = lo.reshape(b, t, 5, -1)
+    delta = jnp.einsum("btfl,fld->btfd", lo, p_att["maa_w2"].astype(x.dtype))
+    mix = p_att["maa"].astype(x.dtype)[None, None] + delta  # (B, T, 5, D)
+    return x[:, :, None, :] + sx[:, :, None, :] * mix  # (B, T, 5, D)
+
+
+def _time_mix(cfg: ModelConfig, p_att: dict, x: jax.Array, shift_in, wkv_in):
+    """x: (B, T, D).  shift_in: (B, D) last token of previous step.
+    Returns (out, shift_out, wkv_out)."""
+    b, t, d = x.shape
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    xx = jnp.concatenate([shift_in[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+    mixed = _ddlerp(p_att, x, xx)
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]
+
+    logw = -jnp.exp(
+        p_att["w0"].astype(jnp.float32)
+        + (jnp.tanh(xw @ p_att["wd1"].astype(x.dtype)) @ p_att["wd2"].astype(x.dtype))
+        .astype(jnp.float32)
+    )  # (B, T, D) <= 0
+    r = (xr @ p_att["wr"].astype(x.dtype)).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = (xk @ p_att["wk"].astype(x.dtype)).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = (xv @ p_att["wv"].astype(x.dtype)).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    g = xg @ p_att["wg"].astype(x.dtype)
+    lw = logw.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+
+    sdt = jnp.bfloat16 if cfg.scan_dtype == "bfloat16" else jnp.float32
+    o, wkv_out = kops.wkv6(
+        r.astype(sdt),
+        k.astype(sdt),
+        v.astype(sdt),
+        lw.astype(sdt),
+        p_att["u"].astype(jnp.float32),
+        wkv_in.astype(jnp.float32),
+        chunk=min(cfg.ssm_chunk, t),
+        impl=cfg.kernel_impl,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d).astype(x.dtype)
+    o = group_norm(o, p_att["ln_x_w"], p_att["ln_x_b"], groups=h)
+    o = (o * jax.nn.silu(g)) @ p_att["wo"].astype(x.dtype)
+    return o, x[:, -1], wkv_out.astype(wkv_in.dtype)
+
+
+def _channel_mix(p_ffn: dict, x: jax.Array, shift_in):
+    xx = jnp.concatenate([shift_in[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+    sx = xx - x
+    xk = x + sx * p_ffn["k_maa"].astype(x.dtype)
+    xr = x + sx * p_ffn["r_maa"].astype(x.dtype)
+    kk = jax.nn.relu(xk @ p_ffn["wk"].astype(x.dtype)) ** 2
+    kv = kk @ p_ffn["wv"].astype(x.dtype)
+    return jax.nn.sigmoid(xr @ p_ffn["wr"].astype(x.dtype)) * kv, x[:, -1]
+
+
+def _block_fwd(cfg, p_blk, x, state):
+    h1 = rms_norm(x, p_blk["ln1"])
+    att, s_att, wkv = _time_mix(cfg, p_blk["att"], h1, state["att_shift"], state["wkv"])
+    x = x + att
+    h2 = rms_norm(x, p_blk["ln2"])
+    ffn, s_ffn = _channel_mix(p_blk["ffn"], h2, state["ffn_shift"])
+    x = x + ffn
+    return x, {"att_shift": s_att, "ffn_shift": s_ffn, "wkv": wkv}
+
+
+# ---------------------------------------------------------------------------
+# Model-level API
+# ---------------------------------------------------------------------------
+
+
+def _zero_state(cfg: ModelConfig, batch: int):
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    return {
+        "att_shift": jnp.zeros((cfg.n_layers, batch, cfg.d_model), jnp.float32),
+        "ffn_shift": jnp.zeros((cfg.n_layers, batch, cfg.d_model), jnp.float32),
+        "wkv": jnp.zeros((cfg.n_layers, batch, h, hd, hd), jnp.float32),
+    }
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, state=None):
+    cdt = cfg.cdtype
+    b, t = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    state = state if state is not None else _zero_state(cfg, b)
+
+    def body(x, scanned):
+        p_blk, st = scanned
+        x, st_out = _block_fwd(cfg, p_blk, x, st)
+        return x, st_out
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, state_out = jax.lax.scan(body, x, (params["blocks"], state))
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"].astype(cdt)
+    return logits, state_out
+
+
+def loss(cfg: ModelConfig, params: dict, batch: dict, rng=None):
+    tokens = batch["tokens"]
+    logits, _ = forward(cfg, params, tokens)
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1, : cfg.vocab].astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    nll = (lse - picked).mean()
+    return nll, {"nll": nll, "aux": jnp.zeros(())}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, prefilled: int = 0):
+    return _zero_state(cfg, batch)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array):
+    """Single-token step: runs the T=1 sequence form (state-carried)."""
+    logits, state = forward_step(cfg, params, tokens, cache)
+    return logits, state
+
+
+def forward_step(cfg, params, tokens, state):
+    cdt = cfg.cdtype
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(cdt)[:, None, :]
+
+    def body(x, scanned):
+        p_blk, st = scanned
+        x, st_out = _block_fwd(cfg, p_blk, x, st)
+        return x, st_out
+
+    x, state_out = jax.lax.scan(body, x, (params["blocks"], state))
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"].astype(cdt))[:, 0, : cfg.vocab]
+    return logits, state_out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": {
+            "att_shift": jax.ShapeDtypeStruct((cfg.n_layers, b, cfg.d_model), jnp.float32),
+            "ffn_shift": jax.ShapeDtypeStruct((cfg.n_layers, b, cfg.d_model), jnp.float32),
+            "wkv": jax.ShapeDtypeStruct((cfg.n_layers, b, h, hd, hd), jnp.float32),
+        },
+    }
+
+
+def param_pspecs(cfg: ModelConfig, mesh) -> dict:
+    blk = {
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "att": {
+            "x_maa": P(None, None),
+            "maa": P(None, None, None),
+            "maa_w1": P(None, None, None),
+            "maa_w2": P(None, None, None, None),
+            "w0": P(None, None),
+            "wd1": P(None, None, None),
+            "wd2": P(None, None, None),
+            "u": P(None, "model", None),
+            "wr": P(None, None, "model"),
+            "wk": P(None, None, "model"),
+            "wv": P(None, None, "model"),
+            "wg": P(None, None, "model"),
+            "wo": P(None, "model", None),
+            "ln_x_w": P(None, None),
+            "ln_x_b": P(None, None),
+        },
+        "ffn": {
+            "k_maa": P(None, None),
+            "r_maa": P(None, None),
+            "wk": P(None, None, "model"),
+            "wv": P(None, "model", None),
+            "wr": P(None, None, "model"),
+        },
+    }
+    return {
+        "embed": P("model", None),
+        "blocks": blk,
+        "final_norm": P(None),
+        "lm_head": P(None, "model"),
+    }
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict:
+    dp = dp_axes_for(mesh, shape.global_batch)
+    if shape.kind in ("train", "prefill"):
+        return {"tokens": P(dp, None)}
+    return {
+        "tokens": P(dp, None),
+        "cache": {
+            "att_shift": P(None, dp, None),
+            "ffn_shift": P(None, dp, None),
+            "wkv": P(None, dp, "model", None, None),
+        },
+    }

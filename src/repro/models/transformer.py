@@ -1,0 +1,339 @@
+"""Generic decoder-only transformer LM: dense, MoE and VLM-stub families.
+
+One implementation covers phi3-mini, stablelm-2, minitron, starcoder2,
+mixtral, deepseek-moe and phi-3-vision (the vision frontend is a stub:
+``input_specs`` supplies precomputed patch embeddings that are prepended
+to the token embeddings, per the assignment).
+
+Layers are stacked and iterated with ``jax.lax.scan`` (compile-time and
+HLO-size control at 32-56 layers), with optional remat.  Attention is the
+chunked flash formulation from ``layers.py``; decode uses a KV cache
+(ring-buffered when a sliding window is configured).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import moe as moe_mod
+from .api import ModelConfig, ShapeSpec, dp_axes, dp_axes_for
+from .layers import apply_rope, decode_attention, flash_attention, mlp, rms_norm
+
+# data-parallel activation axes are mesh-dependent: ("pod","data") on the
+# multi-pod mesh, ("data",) on a single pod -- resolved via api.dp_axes().
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ModelConfig, rng) -> dict:
+    d = cfg.d_model
+    hd = cfg.head_dim
+    ks = jax.random.split(rng, 8)
+    blk = {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "attn": {
+            "wq": jax.random.normal(ks[0], (d, cfg.n_heads * hd), jnp.float32)
+            / jnp.sqrt(d),
+            "wk": jax.random.normal(ks[1], (d, cfg.n_kv_heads * hd), jnp.float32)
+            / jnp.sqrt(d),
+            "wv": jax.random.normal(ks[2], (d, cfg.n_kv_heads * hd), jnp.float32)
+            / jnp.sqrt(d),
+            "wo": jax.random.normal(ks[3], (cfg.n_heads * hd, d), jnp.float32)
+            / jnp.sqrt(cfg.n_heads * hd),
+        },
+    }
+    if cfg.n_experts > 0:
+        blk["moe"] = moe_mod.init_moe(cfg, ks[4])
+    else:
+        wi_cols = 2 * cfg.d_ff if cfg.gated_mlp else cfg.d_ff
+        blk["mlp"] = {
+            "wi": jax.random.normal(ks[5], (d, wi_cols), jnp.float32) / jnp.sqrt(d),
+            "wo": jax.random.normal(ks[6], (cfg.d_ff, d), jnp.float32)
+            / jnp.sqrt(cfg.d_ff),
+        }
+    return blk
+
+
+def init(cfg: ModelConfig, rng) -> dict:
+    k_e, k_b, k_h = jax.random.split(rng, 3)
+    blocks = jax.vmap(lambda r: _init_block(cfg, r))(
+        jax.random.split(k_b, cfg.n_layers)
+    )
+    vp = cfg.vocab_padded
+    params = {
+        "embed": jax.random.normal(k_e, (vp, cfg.d_model), jnp.float32) * 0.02,
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_h, (cfg.d_model, vp), jnp.float32) * 0.02
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _attention(cfg: ModelConfig, p_attn: dict, x: jax.Array, positions: jax.Array):
+    b, t, d = x.shape
+    hd = cfg.head_dim
+    q = (x @ p_attn["wq"].astype(x.dtype)).reshape(b, t, cfg.n_heads, hd)
+    k = (x @ p_attn["wk"].astype(x.dtype)).reshape(b, t, cfg.n_kv_heads, hd)
+    v = (x @ p_attn["wv"].astype(x.dtype)).reshape(b, t, cfg.n_kv_heads, hd)
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    if cfg.kernel_impl == "pallas" and t % 128 == 0:
+        # TPU deploy path: VMEM-resident flash kernel (see kernels/flash_attn)
+        from repro.kernels.flash_attn import flash_attention_pallas
+
+        o = flash_attention_pallas(
+            q, k, v, causal=True, window=cfg.window, interpret=False
+        )
+    else:
+        o = flash_attention(
+            q, k, v, causal=True, window=cfg.window, block_k=cfg.attn_block_k
+        )
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.n_heads * hd)
+    return o @ p_attn["wo"].astype(x.dtype)
+
+
+def _block_fwd(cfg: ModelConfig, p_blk: dict, x: jax.Array, positions: jax.Array):
+    h = rms_norm(x, p_blk["ln1"])
+    x = x + _attention(cfg, p_blk["attn"], h, positions)
+    h = rms_norm(x, p_blk["ln2"])
+    if cfg.n_experts > 0:
+        y, aux = moe_mod.moe_mlp(cfg, p_blk["moe"], h)
+    else:
+        y, aux = mlp(p_blk["mlp"], h, cfg.act, cfg.gated_mlp), 0.0
+    return x + y, aux
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    patches: Optional[jax.Array] = None,
+):
+    """tokens: (B, S) int32; patches: (B, Pn, D) prepended (VLM stub).
+    Returns (logits, aux_loss)."""
+    cdt = cfg.cdtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if patches is not None:
+        x = jnp.concatenate([patches.astype(cdt), x], axis=1)
+    t = x.shape[1]
+    positions = jnp.arange(t)
+
+    def body(carry, p_blk):
+        x, aux = carry
+        x, aux_l = _block_fwd(cfg, p_blk, x, positions)
+        return (x, aux + aux_l), None
+
+    body = _maybe_remat(cfg, body)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            p_blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            (x, aux), _ = body((x, aux), p_blk)
+
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head.astype(cdt)
+    return logits, aux
+
+
+def loss(cfg: ModelConfig, params: dict, batch: dict, rng=None):
+    tokens = batch["tokens"]
+    patches = batch.get("patches")
+    logits, aux = forward(cfg, params, tokens, patches)
+    if patches is not None:
+        logits = logits[:, patches.shape[1] :]  # text region only
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1, : cfg.vocab].astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    nll = (lse - picked).mean()
+    total = nll + aux
+    return total, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (KV cache; ring buffer under sliding window)
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.window) if cfg.window else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, prefilled: int = 0):
+    s = cache_len(cfg, max_len)
+    hd = cfg.head_dim
+    kv = lambda: jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, s, hd), cfg.cdtype)
+    return {"k": kv(), "v": kv(), "len": jnp.asarray(prefilled, jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array):
+    """tokens: (B, 1) -> (logits (B, V), new cache)."""
+    cdt = cfg.cdtype
+    b = tokens.shape[0]
+    hd = cfg.head_dim
+    cur = cache["len"]
+    s_cache = cache["k"].shape[3]
+    slot = cur % s_cache  # == cur when un-windowed (cache sized to max_len)
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(cdt)[:, None, :]
+    positions = cur[None].astype(jnp.int32)
+
+    def body(carry, scanned):
+        x = carry
+        p_blk, k_c, v_c = scanned
+        h = rms_norm(x, p_blk["ln1"])
+        q = (h @ p_blk["attn"]["wq"].astype(cdt)).reshape(b, 1, cfg.n_heads, hd)
+        k = (h @ p_blk["attn"]["wk"].astype(cdt)).reshape(b, 1, cfg.n_kv_heads, hd)
+        v = (h @ p_blk["attn"]["wv"].astype(cdt)).reshape(b, 1, cfg.n_kv_heads, hd)
+        q = apply_rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+        k = apply_rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+        v = v.transpose(0, 2, 1, 3)
+        k_c = jax.lax.dynamic_update_slice(k_c, k.astype(k_c.dtype), (0, 0, slot, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v.astype(v_c.dtype), (0, 0, slot, 0))
+        n_valid = jnp.minimum(cur + 1, s_cache)
+        o = decode_attention(q, k_c, v_c, n_valid, window=None)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * hd)
+        x = x + o @ p_blk["attn"]["wo"].astype(cdt)
+        h2 = rms_norm(x, p_blk["ln2"])
+        if cfg.n_experts > 0:
+            y, _ = moe_mod.moe_mlp(cfg, p_blk["moe"], h2)
+        else:
+            y = mlp(p_blk["mlp"], h2, cfg.act, cfg.gated_mlp)
+        return x + y, (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"])
+    )
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x @ head.astype(cdt))[:, 0, : cfg.vocab]
+    new_cache = {"k": k_new, "v": v_new, "len": cur + 1}
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Specs & shardings
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.n_patches:
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), cfg.cdtype
+            )
+        return specs
+    # decode: one token + cache of seq_len context
+    sc = cache_len(cfg, s)
+    hd = cfg.head_dim
+    kv = jax.ShapeDtypeStruct((cfg.n_layers, b, cfg.n_kv_heads, sc, hd), cfg.cdtype)
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": {
+            "k": kv,
+            "v": kv,
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+    }
+
+
+def _kv_heads_spec(cfg: ModelConfig, mesh, batch: int):
+    """Shard KV heads on 'model' when divisible, else shard head_dim."""
+    dp = dp_axes_for(mesh, batch)
+    model_size = mesh.shape.get("model", 1)
+    if cfg.n_kv_heads % model_size == 0:
+        return P(None, dp, "model", None, None)
+    if cfg.head_dim % model_size == 0:
+        return P(None, dp, None, None, "model")
+    return P(None, dp, None, None, None)
+
+
+def param_pspecs(cfg: ModelConfig, mesh) -> dict:
+    model_size = mesh.shape.get("model", 1)
+    blk = {
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "attn": {
+            "wq": P(None, None, "model"),
+            "wk": P(None, None, "model"),
+            "wv": P(None, None, "model"),
+            "wo": P(None, "model", None),
+        },
+    }
+    if cfg.n_experts > 0:
+        if cfg.expert_sharding == "ep" and cfg.n_experts % model_size == 0:
+            ex = {"wi": P(None, "model", None, None), "wo": P(None, "model", None, None)}
+        else:
+            ex = {"wi": P(None, None, None, "model"), "wo": P(None, None, "model", None)}
+        blk["moe"] = {
+            "router": P(None, None, None),
+            "experts": ex,
+        }
+        if cfg.n_shared_experts > 0:
+            blk["moe"]["shared"] = {
+                "wi": P(None, None, "model"),
+                "wo": P(None, "model", None),
+            }
+    else:
+        blk["mlp"] = {"wi": P(None, None, "model"), "wo": P(None, "model", None)}
+    specs = {
+        "embed": P("model", None),
+        "blocks": blk,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, "model")
+    return specs
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict:
+    dp = dp_axes_for(mesh, shape.global_batch)
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": P(dp, None)}
+        if cfg.n_patches:
+            specs["patches"] = P(dp, None, None)
+        return specs
+    return {
+        "tokens": P(dp, None),
+        "cache": {
+            "k": _kv_heads_spec(cfg, mesh, shape.global_batch),
+            "v": _kv_heads_spec(cfg, mesh, shape.global_batch),
+            "len": P(),
+        },
+    }

@@ -1,0 +1,346 @@
+"""Whisper-style encoder-decoder family (audio backbone, conv-frontend stub).
+
+Per the assignment, the modality frontend is a STUB: ``input_specs``
+supplies precomputed mel-frame embeddings (B, enc_seq, D) -- the two conv
+layers of Whisper are outside scope.  The transformer backbone is
+faithful: sinusoidal positions on the encoder, learned positions on the
+decoder, pre-LN blocks with GELU MLPs, decoder cross-attention, and a
+tied output head.  Decode uses a self-attention KV cache plus precomputed
+cross-attention K/V.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .api import ModelConfig, ShapeSpec, dp_axes, dp_axes_for
+from .layers import decode_attention, flash_attention, layer_norm, mlp
+
+
+def _sinusoids(length: int, channels: int) -> jax.Array:
+    log_timescale = jnp.log(10_000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    t = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _attn_params(cfg, rng, cross=False):
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    nrm = jax.random.normal
+    return {
+        "wq": nrm(ks[0], (d, cfg.n_heads * hd), jnp.float32) / jnp.sqrt(d),
+        "wk": nrm(ks[1], (d, cfg.n_kv_heads * hd), jnp.float32) / jnp.sqrt(d),
+        "wv": nrm(ks[2], (d, cfg.n_kv_heads * hd), jnp.float32) / jnp.sqrt(d),
+        "wo": nrm(ks[3], (cfg.n_heads * hd, d), jnp.float32)
+        / jnp.sqrt(cfg.n_heads * hd),
+    }
+
+
+def _ln(d):
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def _init_enc_block(cfg, rng):
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln1": _ln(d),
+        "attn": _attn_params(cfg, k1),
+        "ln2": _ln(d),
+        "mlp": {
+            "wi": jax.random.normal(k2, (d, cfg.d_ff), jnp.float32) / jnp.sqrt(d),
+            "wo": jax.random.normal(k3, (cfg.d_ff, d), jnp.float32)
+            / jnp.sqrt(cfg.d_ff),
+        },
+    }
+
+
+def _init_dec_block(cfg, rng):
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {
+        "ln1": _ln(d),
+        "self_attn": _attn_params(cfg, k1),
+        "ln_x": _ln(d),
+        "cross_attn": _attn_params(cfg, k2),
+        "ln2": _ln(d),
+        "mlp": {
+            "wi": jax.random.normal(k3, (d, cfg.d_ff), jnp.float32) / jnp.sqrt(d),
+            "wo": jax.random.normal(k4, (cfg.d_ff, d), jnp.float32)
+            / jnp.sqrt(cfg.d_ff),
+        },
+    }
+
+
+def init(cfg: ModelConfig, rng) -> dict:
+    k_e, k_eb, k_db, k_p = jax.random.split(rng, 4)
+    enc = jax.vmap(lambda r: _init_enc_block(cfg, r))(
+        jax.random.split(k_eb, cfg.n_enc_layers)
+    )
+    dec = jax.vmap(lambda r: _init_dec_block(cfg, r))(
+        jax.random.split(k_db, cfg.n_layers)
+    )
+    return {
+        "embed": jax.random.normal(k_e, (cfg.vocab_padded, cfg.d_model), jnp.float32)
+        * 0.02,
+        "pos_dec": jax.random.normal(k_p, (32_768, cfg.d_model), jnp.float32) * 0.01,
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "enc_ln": _ln(cfg.d_model),
+        "dec_ln": _ln(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _mha(cfg, p, xq, xkv, causal):
+    b, tq, d = xq.shape
+    hd = cfg.head_dim
+    q = (xq @ p["wq"].astype(xq.dtype)).reshape(b, tq, cfg.n_heads, hd)
+    k = (xkv @ p["wk"].astype(xq.dtype)).reshape(b, -1, cfg.n_kv_heads, hd)
+    v = (xkv @ p["wv"].astype(xq.dtype)).reshape(b, -1, cfg.n_kv_heads, hd)
+    o = flash_attention(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal,
+        block_k=cfg.attn_block_k,
+    )
+    return o.transpose(0, 2, 1, 3).reshape(b, tq, cfg.n_heads * hd) @ p["wo"].astype(
+        xq.dtype
+    )
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array):
+    """frames: (B, enc_seq, D) precomputed embeddings (conv stub)."""
+    cdt = cfg.cdtype
+    x = frames.astype(cdt) + _sinusoids(frames.shape[1], cfg.d_model).astype(cdt)
+
+    def body(x, p_blk):
+        h = layer_norm(x, p_blk["ln1"]["w"], p_blk["ln1"]["b"])
+        x = x + _mha(cfg, p_blk["attn"], h, h, causal=False)
+        h = layer_norm(x, p_blk["ln2"]["w"], p_blk["ln2"]["b"])
+        x = x + mlp(p_blk["mlp"], h, "gelu", gated=False)
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layer_norm(x, params["enc_ln"]["w"], params["enc_ln"]["b"])
+
+
+def decode_train(cfg: ModelConfig, params: dict, tokens: jax.Array, enc: jax.Array):
+    cdt = cfg.cdtype
+    b, t = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    x = x + params["pos_dec"][:t].astype(cdt)
+
+    def body(x, p_blk):
+        h = layer_norm(x, p_blk["ln1"]["w"], p_blk["ln1"]["b"])
+        x = x + _mha(cfg, p_blk["self_attn"], h, h, causal=True)
+        h = layer_norm(x, p_blk["ln_x"]["w"], p_blk["ln_x"]["b"])
+        x = x + _mha(cfg, p_blk["cross_attn"], h, enc, causal=False)
+        h = layer_norm(x, p_blk["ln2"]["w"], p_blk["ln2"]["b"])
+        x = x + mlp(p_blk["mlp"], h, "gelu", gated=False)
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+    return x @ params["embed"].T.astype(cdt)  # tied head
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict):
+    enc = encode(cfg, params, batch["frames"])
+    return decode_train(cfg, params, batch["tokens"], enc), jnp.zeros(())
+
+
+def loss(cfg: ModelConfig, params: dict, batch: dict, rng=None):
+    logits, _ = forward(cfg, params, batch)
+    tokens = batch["tokens"]
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1, : cfg.vocab].astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    nll = (lse - picked).mean()
+    return nll, {"nll": nll, "aux": jnp.zeros(())}
+
+
+# ---------------------------------------------------------------------------
+# Decode (cached)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, prefilled: int = 0):
+    hd = cfg.head_dim
+    kv = lambda s: jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, s, hd), cfg.cdtype)
+    return {
+        "self_k": kv(max_len),
+        "self_v": kv(max_len),
+        "cross_k": kv(cfg.enc_seq),
+        "cross_v": kv(cfg.enc_seq),
+        "len": jnp.asarray(prefilled, jnp.int32),
+    }
+
+
+def precompute_cross_kv(cfg: ModelConfig, params: dict, enc: jax.Array):
+    """Build the cross-attention K/V cache once per request batch."""
+    hd = cfg.head_dim
+    b = enc.shape[0]
+
+    def per_layer(p_blk, _):
+        k = (enc @ p_blk["cross_attn"]["wk"].astype(enc.dtype)).reshape(
+            b, -1, cfg.n_kv_heads, hd
+        )
+        v = (enc @ p_blk["cross_attn"]["wv"].astype(enc.dtype)).reshape(
+            b, -1, cfg.n_kv_heads, hd
+        )
+        return None, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+    _, (ck, cv) = jax.lax.scan(lambda c, p: per_layer(p, c), None, params["dec_blocks"])
+    return ck, cv
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array):
+    cdt = cfg.cdtype
+    b = tokens.shape[0]
+    hd = cfg.head_dim
+    cur = cache["len"]
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(cdt)[:, None, :]
+    x = x + jax.lax.dynamic_slice(
+        params["pos_dec"], (cur, 0), (1, cfg.d_model)
+    ).astype(cdt)
+
+    def body(x, scanned):
+        p_blk, k_c, v_c, ck, cv = scanned
+        h = layer_norm(x, p_blk["ln1"]["w"], p_blk["ln1"]["b"])
+        q = (h @ p_blk["self_attn"]["wq"].astype(cdt)).reshape(b, 1, cfg.n_heads, hd)
+        k = (h @ p_blk["self_attn"]["wk"].astype(cdt)).reshape(b, 1, cfg.n_kv_heads, hd)
+        v = (h @ p_blk["self_attn"]["wv"].astype(cdt)).reshape(b, 1, cfg.n_kv_heads, hd)
+        q, k, v = (z.transpose(0, 2, 1, 3) for z in (q, k, v))
+        k_c = jax.lax.dynamic_update_slice(k_c, k.astype(k_c.dtype), (0, 0, cur, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v.astype(v_c.dtype), (0, 0, cur, 0))
+        o = decode_attention(q, k_c, v_c, cur + 1)
+        x = x + o.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ p_blk["self_attn"][
+            "wo"
+        ].astype(cdt)
+        h = layer_norm(x, p_blk["ln_x"]["w"], p_blk["ln_x"]["b"])
+        q2 = (h @ p_blk["cross_attn"]["wq"].astype(cdt)).reshape(b, 1, cfg.n_heads, hd)
+        o2 = decode_attention(
+            q2.transpose(0, 2, 1, 3), ck, cv, jnp.asarray(cfg.enc_seq, jnp.int32)
+        )
+        x = x + o2.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ p_blk["cross_attn"][
+            "wo"
+        ].astype(cdt)
+        h = layer_norm(x, p_blk["ln2"]["w"], p_blk["ln2"]["b"])
+        x = x + mlp(p_blk["mlp"], h, "gelu", gated=False)
+        return x, (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body,
+        x,
+        (params["dec_blocks"], cache["self_k"], cache["self_v"], cache["cross_k"],
+         cache["cross_v"]),
+    )
+    x = layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+    logits = (x @ params["embed"].T.astype(cdt))[:, 0, : cfg.vocab]
+    new_cache = dict(cache)
+    new_cache.update({"self_k": k_new, "self_v": v_new, "len": cur + 1})
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Specs & shardings
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        return {
+            "frames": jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), cfg.cdtype),
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    hd = cfg.head_dim
+    kv = lambda sl: jax.ShapeDtypeStruct(
+        (cfg.n_layers, b, cfg.n_kv_heads, sl, hd), cfg.cdtype
+    )
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": {
+            "self_k": kv(s),
+            "self_v": kv(s),
+            "cross_k": kv(cfg.enc_seq),
+            "cross_v": kv(cfg.enc_seq),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+    }
+
+
+def _attn_pspecs():
+    return {
+        "wq": P(None, None, "model"),
+        "wk": P(None, None, "model"),
+        "wv": P(None, None, "model"),
+        "wo": P(None, "model", None),
+    }
+
+
+def param_pspecs(cfg: ModelConfig, mesh) -> dict:
+    ln = {"w": P(None, None), "b": P(None, None)}
+    enc = {
+        "ln1": ln,
+        "attn": _attn_pspecs(),
+        "ln2": ln,
+        "mlp": {"wi": P(None, None, "model"), "wo": P(None, "model", None)},
+    }
+    dec = {
+        "ln1": ln,
+        "self_attn": _attn_pspecs(),
+        "ln_x": ln,
+        "cross_attn": _attn_pspecs(),
+        "ln2": ln,
+        "mlp": {"wi": P(None, None, "model"), "wo": P(None, "model", None)},
+    }
+    return {
+        "embed": P("model", None),
+        "pos_dec": P(None, None),
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "enc_ln": {"w": P(None), "b": P(None)},
+        "dec_ln": {"w": P(None), "b": P(None)},
+    }
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict:
+    dp = dp_axes_for(mesh, shape.global_batch)
+    if shape.kind in ("train", "prefill"):
+        return {"frames": P(dp, None, None), "tokens": P(dp, None)}
+    model_size = mesh.shape.get("model", 1)
+    kv = (
+        P(None, dp, "model", None, None)
+        if cfg.n_kv_heads % model_size == 0
+        else P(None, dp, None, None, None)
+    )
+    return {
+        "tokens": P(dp, None),
+        "cache": {
+            "self_k": kv,
+            "self_v": kv,
+            "cross_k": kv,
+            "cross_v": kv,
+            "len": P(),
+        },
+    }

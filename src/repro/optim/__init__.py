@@ -1,0 +1,11 @@
+from .adamw import (  # noqa: F401
+    AdamWConfig,
+    AdamWState,
+    apply_updates,
+    global_norm,
+    init,
+    opt_state_pspecs,
+    schedule,
+    zero1_pspecs,
+)
+from . import compress  # noqa: F401

@@ -1,0 +1,156 @@
+"""AdamW with cosine schedule, global-norm clipping and optional ZeRO-1.
+
+Self-contained (no optax dependency).  State is a pytree mirroring params
+(m, v) plus a step counter.  ``zero1_pspecs`` extends the parameter
+PartitionSpecs so optimizer moments are additionally sharded along the
+data axis where divisible -- the ZeRO-1 trick: pjit then all-gathers
+updated params once per step instead of replicating moments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    # ZeRO-style master weights: params live in bf16, the f32 master copy
+    # lives in the optimizer state (shard it with zero1 over the data axis;
+    # pjit all-gathers the bf16 params once per step)
+    master_weights: bool = False
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+    master: dict | None = None
+
+
+def init(params, master_weights: bool = False) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    master = (
+        jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        if master_weights
+        else None
+    )
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros,
+                      master=master)
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(
+    cfg: AdamWConfig, params, grads, state: AdamWState
+):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.betas
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    src = state.master if (cfg.master_weights and state.master is not None) \
+        else params
+    flat_p, treedef = jax.tree.flatten(src)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_src = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    if cfg.master_weights and state.master is not None:
+        # master stays f32 (sharded); distributed params refresh in bf16
+        new_master = new_src
+        new_p = jax.tree.map(
+            lambda mp, p: mp.astype(p.dtype), new_master, params
+        )
+        new_state = AdamWState(step=step, m=new_m, v=new_v, master=new_master)
+    else:
+        new_p = new_src
+        new_state = AdamWState(step=step, m=new_m, v=new_v, master=state.master)
+    return (
+        new_p,
+        new_state,
+        {"grad_norm": gnorm, "lr": lr},
+    )
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: shard optimizer moments over the data axis where possible
+# ---------------------------------------------------------------------------
+
+
+def zero1_pspecs(param_pspecs, params, mesh) -> dict:
+    """Moment PartitionSpecs: param spec + data-axis sharding on the first
+    dimension that is unsharded and divisible by the data-axis size."""
+    data = mesh.shape.get("data", 1)
+
+    def one(spec: P, p):
+        if data <= 1:
+            return spec
+        used = set()
+        for e in spec:
+            if isinstance(e, tuple):
+                used.update(e)
+            elif e is not None:
+                used.add(e)
+        if "data" in used:  # e.g. FSDP already shards this leaf over data
+            return spec
+        entries = list(spec) + [None] * (p.ndim - len(spec))
+        for i, (e, dim) in enumerate(zip(entries, p.shape)):
+            if e is None and dim % data == 0:
+                entries[i] = "data"
+                return P(*entries)
+        return spec
+
+    return jax.tree.map(one, param_pspecs, params)
+
+
+def opt_state_pspecs(param_pspecs, params, mesh, zero1: bool = False,
+                     master_weights: bool = False):
+    mspec = zero1_pspecs(param_pspecs, params, mesh) if zero1 else param_pspecs
+    return AdamWState(
+        step=P(), m=mspec, v=mspec,
+        master=mspec if master_weights else None,
+    )

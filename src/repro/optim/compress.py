@@ -1,0 +1,57 @@
+"""Int8 gradient compression with error feedback (cross-pod traffic trick).
+
+On a >=2-pod mesh the data-parallel gradient all-reduce crosses the slow
+inter-pod links; int8 quantization cuts that traffic 4x (vs f32 moments)
+at no convergence cost when the quantization error is fed back into the
+next step (Seide et al. / 1-bit SGD lineage).
+
+``compress(g, err)`` returns (q, scale, new_err) where q is int8 and
+``decompress`` reconstructs g_hat = q * scale.  In the training step the
+pair wraps the cross-pod reduction:
+
+    g_local        -> psum within pod (f32, fast ICI)
+    compress       -> int8 + scale
+    psum(pod axis) -> emulated by pjit on the quantized tensor
+    decompress     -> g_hat; err' = g - g_hat  carried in opt state
+
+The repo applies it inside ``train/loop.py`` when ``grad_compress=True``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array, err: jax.Array):
+    """Quantize (g + err) to int8 with a per-tensor scale."""
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    g_hat = q.astype(jnp.float32) * scale
+    new_err = g32 - g_hat
+    return q, scale, new_err
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, err_tree):
+    """Apply error-feedback int8 roundtrip to every leaf; returns
+    (g_hat_tree, new_err_tree).  The int8 tensor is what would cross the
+    pod axis; the roundtrip is numerically identical to a real int8
+    all-reduce with deterministic summation order."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_tree)
+    outs = []
+    errs = []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress(g, e)
+        outs.append(decompress(q, s))
+        errs.append(ne)
+    return treedef.unflatten(outs), treedef.unflatten(errs)
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)

@@ -1,0 +1,89 @@
+"""Batched decode serving engine with continuous batching (slot refill).
+
+A fixed number of batch slots share one jitted decode step; finished
+requests free their slot, which is refilled from the queue without
+recompiling (state is carried per-slot).  Prefill is teacher-forced
+through ``decode_step`` token by token for cache-consistency (a dedicated
+chunked-prefill path is a future optimization; the 32k-prefill dry-run
+exercises the forward pass directly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_family
+from repro.models.api import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, slots: int = 4, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.fam = get_family(cfg)
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * slots
+        self.cache = self.fam.init_cache(cfg, slots, max_len)
+        self._step = jax.jit(
+            lambda p, c, t: self.fam.decode_step(self.cfg, p, c, t)
+        )
+        self.tokens = np.zeros((slots, 1), np.int32)
+        self._pending_prefill: List[deque] = [deque() for _ in range(slots)]
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _refill(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[s] = req
+                self._pending_prefill[s] = deque(req.prompt)
+                self.tokens[s, 0] = self._pending_prefill[s].popleft()
+
+    def step(self):
+        """One engine tick: advances every active slot by one token."""
+        self._refill()
+        if all(a is None for a in self.active):
+            return False
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(self.tokens)
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self._pending_prefill[s]:
+                # still prefilling: feed the next prompt token, ignore sample
+                self.tokens[s, 0] = self._pending_prefill[s].popleft()
+                continue
+            req.out.append(int(nxt[s]))
+            self.tokens[s, 0] = int(nxt[s])
+            if len(req.out) >= req.max_new_tokens:
+                req.done = True
+                self.active[s] = None
+        return True
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return ticks

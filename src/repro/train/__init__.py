@@ -1,0 +1,2 @@
+from .checkpoint import CheckpointManager  # noqa: F401
+from .loop import TrainConfig, TrainLoop, make_train_step, run_with_restarts  # noqa: F401

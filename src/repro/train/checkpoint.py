@@ -1,0 +1,105 @@
+"""Checkpointing: atomic, elastic, restart-capable.
+
+Format: one ``step_XXXXXXXX.npz`` per checkpoint holding every leaf under
+a path key, written to a temp file and atomically renamed, plus a
+``manifest.json``.  Restore rebuilds the pytree from the treedef of a
+template and re-shards to whatever mesh the restarted job has (arrays are
+stored unsharded; pjit re-shards on first use) -- i.e. a job can come back
+with a different device count (elastic restart).
+
+A small background-thread writer keeps the train loop from blocking on
+disk (async checkpointing); ``wait()`` joins before the next save.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name == "bfloat16":  # npz has no bf16: store as f32
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    # ---- save ----------------------------------------------------------------
+    def save(self, step: int, tree) -> None:
+        arrays = _flatten_with_paths(tree)  # device_get on caller thread
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, arrays), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, arrays)
+
+    def _write(self, step: int, arrays: dict) -> None:
+        tmp = self.dir / f".tmp_step_{step:08d}.npz"
+        final = self.dir / f"step_{step:08d}.npz"
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        tmp.rename(final)  # atomic on POSIX
+        manifest = {"latest_step": step, "time": time.time()}
+        mtmp = self.dir / ".manifest.tmp"
+        mtmp.write_text(json.dumps(manifest))
+        mtmp.rename(self.dir / "manifest.json")
+        self._gc()
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("step_*.npz"))
+        for old in ckpts[: -self.keep]:
+            old.unlink(missing_ok=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---- restore --------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        mf = self.dir / "manifest.json"
+        if not mf.exists():
+            ckpts = sorted(self.dir.glob("step_*.npz"))
+            if not ckpts:
+                return None
+            return int(ckpts[-1].stem.split("_")[1])
+        return int(json.loads(mf.read_text())["latest_step"])
+
+    def restore(self, step: int, template):
+        """Rebuild a pytree shaped like ``template`` from disk."""
+        path = self.dir / f"step_{step:08d}.npz"
+        data = np.load(path)
+        flat = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in flat[0]:
+            key = "/".join(str(x) for x in p)
+            arr = data[key]
+            leaves.append(arr.astype(np.asarray(leaf).dtype) if hasattr(leaf, "dtype") else arr)
+        return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+    def restore_latest(self, template):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, template)

@@ -1,0 +1,77 @@
+"""Unit tests: band storage, conversions, matvec, partitioning."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.banded import (
+    band_matvec,
+    band_to_block_tridiag,
+    band_to_dense,
+    block_tridiag_to_dense,
+    dense_to_band,
+    pad_banded,
+    padded_partition_size,
+    partition_sizes,
+    random_banded,
+    random_rhs,
+)
+
+
+@pytest.mark.parametrize("n,k", [(17, 2), (32, 5), (64, 1), (10, 9)])
+def test_band_dense_roundtrip(n, k):
+    band = jnp.asarray(random_banded(n, k, d=1.0, seed=0))
+    dense = band_to_dense(band)
+    band2 = dense_to_band(dense, k)
+    np.testing.assert_allclose(np.asarray(band), np.asarray(band2))
+
+
+@pytest.mark.parametrize("n,k,r", [(33, 3, 1), (40, 6, 4)])
+def test_band_matvec_matches_dense(n, k, r):
+    band = jnp.asarray(random_banded(n, k, d=0.8, seed=1))
+    dense = np.asarray(band_to_dense(band))
+    x = np.random.default_rng(2).normal(size=(n, r))
+    got = np.asarray(band_matvec(band, jnp.asarray(x)))
+    np.testing.assert_allclose(got, dense @ x, rtol=2e-4, atol=1e-5)
+    got1 = np.asarray(band_matvec(band, jnp.asarray(x[:, 0])))
+    np.testing.assert_allclose(got1, dense @ x[:, 0], rtol=2e-4, atol=1e-5)
+
+
+def test_partition_sizes_paper_rule():
+    # paper Sec 3.1: first P_r partitions get floor(N/P)+1 rows
+    sizes = partition_sizes(10, 3)
+    assert sizes.tolist() == [4, 3, 3]
+    assert padded_partition_size(100, 4, 8) % 8 == 0
+
+
+@pytest.mark.parametrize("n,k,p", [(60, 4, 3), (100, 7, 5), (64, 8, 2)])
+def test_block_tridiag_reassembly(n, k, p):
+    band = jnp.asarray(random_banded(n, k, d=1.0, seed=3))
+    bt = band_to_block_tridiag(band, k, p)
+    band_p, _ = pad_banded(band, jnp.zeros((n,)), bt.n_pad)
+    dense_pad = np.asarray(band_to_dense(band_p))
+    dense_bt = np.asarray(block_tridiag_to_dense(bt))
+    np.testing.assert_allclose(dense_pad, dense_bt, atol=1e-6)
+
+
+def test_pad_banded_identity_rows():
+    band = jnp.asarray(random_banded(10, 2, d=1.0, seed=0))
+    band_p, b_p = pad_banded(band, jnp.ones((10,)), 16)
+    dense = np.asarray(band_to_dense(band_p))
+    # padded rows are identity
+    np.testing.assert_allclose(dense[10:, 10:], np.eye(6))
+    assert np.all(np.asarray(b_p)[10:] == 0.0)
+
+
+def test_random_banded_dominance():
+    for d in (0.5, 1.0, 2.0):
+        band = random_banded(50, 4, d=d, seed=0)
+        off = np.abs(band).sum(axis=1) - np.abs(band[:, 4])
+        ratio = np.abs(band[:, 4]) / np.maximum(off, 1e-12)
+        np.testing.assert_allclose(ratio, d, rtol=1e-6)
+
+
+def test_random_rhs_parabola():
+    b = random_rhs(101)
+    assert b[0] == pytest.approx(1.0)
+    assert b.max() > 300.0

@@ -1,0 +1,66 @@
+"""Float64 reference validation, run in a subprocess (x64 flag is global).
+
+Asserts the machine-precision claims the f32 in-process tests cannot:
+LU/spike algebra to ~1e-12, SaP-C == near-exact solve at d >= 1.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+SCRIPT = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+from repro.core import SaPOptions, solve_banded
+from repro.core.banded import band_to_block_tridiag, block_tridiag_to_dense, random_banded
+from repro.core.block_lu import btf_ref, bts_ref
+from repro.core.spike import build_preconditioner
+
+# block LU at f64: machine precision
+band = jnp.asarray(random_banded(96, 6, d=1.0, seed=0))
+bt = band_to_block_tridiag(band, 6, 4)
+fac = btf_ref(bt.d, bt.e, bt.f)
+rhs = jnp.asarray(np.random.default_rng(0).normal(size=(bt.p, bt.m, bt.k, 2)))
+x = bts_ref(fac, rhs)
+dense = np.asarray(block_tridiag_to_dense(bt))
+ni = bt.m * bt.k
+for i in range(4):
+    ai = dense[i*ni:(i+1)*ni, i*ni:(i+1)*ni]
+    r = np.abs(ai @ np.asarray(x[i]).reshape(ni,2) - np.asarray(rhs[i]).reshape(ni,2)).max()
+    assert r < 1e-11, f"block LU residual {r}"
+
+# SaP-C preconditioner ~= A^{-1} at d=1.2
+pc = build_preconditioner(bt, "C", precond_dtype=jnp.float64)
+r = np.random.default_rng(1).normal(size=bt.n_pad)
+z = np.asarray(pc.apply(jnp.asarray(r)))
+rel = np.linalg.norm(dense @ z - r)/np.linalg.norm(r)
+assert rel < 5e-2, f"precond residual {rel}"
+
+# full solve to 1e-12
+band = jnp.asarray(random_banded(500, 8, d=1.0, seed=42))
+from repro.core.banded import band_to_dense
+A = np.asarray(band_to_dense(band))
+xstar = np.random.default_rng(2).normal(size=500)
+sol = solve_banded(band, jnp.asarray(A @ xstar),
+                   SaPOptions(p=8, variant="C", tol=1e-12, precond_dtype="float64"))
+err = np.linalg.norm(np.asarray(sol.x) - xstar)/np.linalg.norm(xstar)
+assert sol.converged and err < 1e-10, f"solve err {err} it {sol.iterations}"
+print("F64_REFERENCE_OK")
+"""
+
+
+def test_f64_reference_suite():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
+             "HOME": "/root"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "F64_REFERENCE_OK" in proc.stdout

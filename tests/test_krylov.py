@@ -1,0 +1,96 @@
+"""Unit tests: BiCGStab(2) and CG solvers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.krylov import bicgstab2, cg
+
+
+def _random_system(n=50, seed=0, spd=False):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, n))
+    if spd:
+        a = a @ a.T + n * np.eye(n)
+    else:
+        a = a + n * np.eye(n)  # well-conditioned, nonsymmetric
+    x = rng.normal(size=n)
+    return a, x, a @ x
+
+
+def test_bicgstab2_unpreconditioned():
+    a, xstar, b = _random_system(seed=1)
+    res = bicgstab2(lambda v: jnp.asarray(a) @ v, jnp.asarray(b), tol=1e-8,
+                    maxiter=200)
+    assert bool(res.converged)
+    np.testing.assert_allclose(np.asarray(res.x), xstar, rtol=1e-4, atol=1e-5)
+
+
+def test_bicgstab2_exact_preconditioner_quarter_exit():
+    """With M = A^{-1} the solver must exit in <= 1 iteration and must NOT
+    poison x (regression test for the MR degeneracy guard)."""
+    a, xstar, b = _random_system(seed=2)
+    ainv = jnp.asarray(np.linalg.inv(a))
+    res = bicgstab2(
+        lambda v: jnp.asarray(a) @ v,
+        jnp.asarray(b),
+        precond=lambda v: ainv @ v,
+        tol=1e-5,
+        maxiter=50,
+    )
+    assert bool(res.converged)
+    assert float(res.iterations) <= 1.0
+    np.testing.assert_allclose(np.asarray(res.x), xstar, rtol=1e-3, atol=1e-4)
+
+
+def test_bicgstab2_counts_quarters():
+    a, xstar, b = _random_system(seed=3)
+    ainv = jnp.asarray(np.linalg.inv(a))
+    res = bicgstab2(lambda v: jnp.asarray(a) @ v, jnp.asarray(b),
+                    precond=lambda v: ainv @ v, tol=1e-5)
+    assert float(res.iterations) in (0.0, 0.25, 0.5, 1.0)
+
+
+def test_cg_spd():
+    a, xstar, b = _random_system(seed=4, spd=True)
+    res = cg(lambda v: jnp.asarray(a) @ v, jnp.asarray(b), tol=1e-10,
+             maxiter=500)
+    assert bool(res.converged)
+    np.testing.assert_allclose(np.asarray(res.x), xstar, rtol=1e-4, atol=1e-5)
+
+
+def test_cg_jacobi_preconditioner_helps():
+    rng = np.random.default_rng(5)
+    d = np.abs(rng.normal(size=60)) * 100 + 1
+    a = np.diag(d) + rng.normal(size=(60, 60)) * 0.1
+    a = (a + a.T) / 2 + 10 * np.eye(60)
+    b = rng.normal(size=60)
+    plain = cg(lambda v: jnp.asarray(a) @ v, jnp.asarray(b), tol=1e-10,
+               maxiter=500)
+    jac = cg(
+        lambda v: jnp.asarray(a) @ v,
+        jnp.asarray(b),
+        precond=lambda v: v / jnp.asarray(np.diag(a)),
+        tol=1e-10,
+        maxiter=500,
+    )
+    assert bool(jac.converged)
+    assert float(jac.iterations) <= float(plain.iterations)
+
+
+def test_bicgstab2_zero_rhs():
+    a, _, _ = _random_system(seed=6)
+    res = bicgstab2(lambda v: jnp.asarray(a) @ v, jnp.zeros(50), tol=1e-10)
+    assert bool(res.converged)
+    assert float(jnp.abs(res.x).max()) == 0.0
+
+
+def test_bicgstab2_maxiter_respected():
+    # nearly singular, no preconditioner, tiny budget
+    rng = np.random.default_rng(7)
+    a = rng.normal(size=(80, 80))
+    b = rng.normal(size=80)
+    res = bicgstab2(lambda v: jnp.asarray(a) @ v, jnp.asarray(b), tol=1e-14,
+                    maxiter=3)
+    assert float(res.iterations) <= 3.0

@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SaPOptions, solve_banded
+from repro.core.banded import (
+    band_matvec,
+    band_to_dense,
+    dense_to_band,
+    random_banded,
+)
+from repro.core import reorder as R
+from repro.core.sparse import random_sparse
+from repro.kernels import ops
+from repro.optim import compress
+
+COMMON = dict(deadline=None, max_examples=15, print_blob=True)
+
+
+@given(
+    n=st.integers(8, 60),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 10_000),
+)
+@settings(**COMMON)
+def test_band_roundtrip_property(n, k, seed):
+    k = min(k, n - 1)
+    band = jnp.asarray(random_banded(n, k, d=1.0, seed=seed))
+    band2 = dense_to_band(band_to_dense(band), k)
+    np.testing.assert_allclose(np.asarray(band), np.asarray(band2), atol=1e-6)
+
+
+@given(
+    n=st.integers(40, 150),
+    k=st.integers(1, 5),
+    p=st.integers(1, 6),
+    d=st.floats(1.0, 4.0),
+    variant=st.sampled_from(["C", "D"]),
+    seed=st.integers(0, 10_000),
+)
+@settings(**COMMON)
+def test_sap_solves_diagonally_dominant_systems(n, k, p, d, variant, seed):
+    """Invariant: for d >= 1 the SaP solver converges and matches the dense
+    solution to f32 accuracy, for any (n, k, p, variant)."""
+    k = min(k, max(1, n // (3 * p)))
+    band = jnp.asarray(random_banded(n, k, d=d, seed=seed), jnp.float32)
+    dense = np.asarray(band_to_dense(band), dtype=np.float64)
+    xstar = np.random.default_rng(seed).normal(size=n)
+    b = jnp.asarray(dense @ xstar, jnp.float32)
+    sol = solve_banded(band, b, SaPOptions(p=p, variant=variant, tol=1e-6,
+                                           maxiter=400))
+    assert sol.converged
+    err = np.linalg.norm(np.asarray(sol.x) - xstar) / np.linalg.norm(xstar)
+    assert err < 5e-3
+
+
+@given(
+    n=st.integers(20, 120),
+    seed=st.integers(0, 10_000),
+)
+@settings(**COMMON)
+def test_reorderings_are_permutations(n, seed):
+    csr = random_sparse(n, d=1.5, shuffle=True, seed=seed)
+    db = R.diagonal_boosting(csr)
+    cm = R.cuthill_mckee(R.symmetrize(csr))
+    assert sorted(db.tolist()) == list(range(n))
+    assert sorted(cm.tolist()) == list(range(n))
+
+
+@given(
+    t=st.sampled_from([16, 32, 64]),
+    chunk=st.sampled_from([4, 8, 16]),
+    dd=st.sampled_from([4, 8]),
+    seed=st.integers(0, 1000),
+)
+@settings(**COMMON)
+def test_chunked_scan_equals_sequential(t, chunk, dd, seed):
+    """The SaP-scan invariant: chunked == sequential for any chunking."""
+    rng = np.random.default_rng(seed)
+    shape = (1, 1, t, dd)
+    r = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    k = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    v = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    logw = -jnp.exp(jnp.asarray(rng.normal(size=shape), jnp.float32) * 0.5)
+    u = jnp.asarray(rng.normal(size=(1, dd)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(1, 1, dd, dd)), jnp.float32) * 0.1
+    from repro.kernels import ref
+
+    o_seq, s_seq = ref.wkv6_ref(r, k, v, logw, u, s0)
+    o_chk, s_chk = ops.wkv6(r, k, v, logw, u, s0, chunk=chunk, impl="jnp")
+    np.testing.assert_allclose(np.asarray(o_seq), np.asarray(o_chk),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s_seq), np.asarray(s_chk),
+                               rtol=5e-4, atol=5e-4)
+
+
+@given(
+    frac=st.floats(0.0, 0.3),
+    seed=st.integers(0, 1000),
+)
+@settings(**COMMON)
+def test_dropoff_budget_invariant(frac, seed):
+    csr = random_sparse(80, d=1.0, shuffle=False, seed=seed)
+    total = np.abs(csr.data).sum()
+    out, k_new = R.drop_off(csr, frac)
+    removed = total - np.abs(out.data).sum()
+    assert removed <= frac * total + 1e-9
+    assert k_new <= max(R.half_bandwidth(csr), 0)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(**COMMON)
+def test_compressor_error_feedback_invariant(seed):
+    """q*scale + err' == g + err exactly: no gradient mass is ever lost."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(64,)) * rng.uniform(0.01, 100), jnp.float32)
+    err = jnp.asarray(rng.normal(size=(64,)) * 0.01, jnp.float32)
+    q, scale, new_err = compress.compress(g, err)
+    recon = compress.decompress(q, scale) + new_err
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(g + err),
+                               rtol=1e-5, atol=1e-6)
+    assert q.dtype == jnp.int8

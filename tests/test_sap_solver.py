@@ -1,0 +1,113 @@
+"""End-to-end solver tests: dense banded + sparse pipelines (paper Sec 4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SaPOptions, solve_banded, solve_sparse
+from repro.core.banded import band_to_dense, random_banded, random_rhs
+from repro.core.sparse import random_sparse
+
+
+@pytest.mark.parametrize("variant", ["C", "D"])
+@pytest.mark.parametrize("n,k,p", [(200, 4, 4), (333, 5, 7), (500, 8, 8)])
+def test_dense_banded_f32(n, k, p, variant):
+    band = jnp.asarray(random_banded(n, k, d=1.0, seed=42), jnp.float32)
+    dense = np.asarray(band_to_dense(band))
+    xstar = np.random.default_rng(0).normal(size=n)
+    b = jnp.asarray(dense @ xstar, jnp.float32)
+    sol = solve_banded(
+        band, b, SaPOptions(p=p, variant=variant, tol=1e-6, maxiter=300)
+    )
+    assert sol.converged
+    err = np.linalg.norm(np.asarray(sol.x) - xstar) / np.linalg.norm(xstar)
+    assert err < 1e-4
+
+
+@pytest.mark.parametrize("d,max_c_iters", [(2.0, 1.0), (1.0, 1.5), (0.3, 30.0)])
+def test_iterations_grow_as_dominance_drops(d, max_c_iters):
+    """Paper Fig 4.2 / Table 4.2: iteration count rises as d falls."""
+    band = jnp.asarray(random_banded(400, 6, d=d, seed=1), jnp.float32)
+    dense = np.asarray(band_to_dense(band))
+    xstar = np.random.default_rng(1).normal(size=400)
+    sol = solve_banded(
+        band,
+        jnp.asarray(dense @ xstar, jnp.float32),
+        SaPOptions(p=8, variant="C", tol=1e-6, maxiter=500),
+    )
+    assert sol.converged
+    assert sol.iterations <= max_c_iters
+
+
+def test_coupled_fewer_iterations_than_decoupled():
+    """Paper Table 4.1: C_it < D_it (better preconditioner, dearer setup)."""
+    band = jnp.asarray(random_banded(480, 8, d=1.0, seed=3), jnp.float32)
+    dense = np.asarray(band_to_dense(band))
+    b = jnp.asarray(dense @ np.ones(480), jnp.float32)
+    it = {}
+    for v in ("C", "D"):
+        sol = solve_banded(band, b, SaPOptions(p=8, variant=v, tol=1e-6))
+        assert sol.converged
+        it[v] = sol.iterations
+    assert it["C"] <= it["D"]
+
+
+def test_mixed_precision_preconditioner():
+    """Paper Sec 3.1: low-precision preconditioner + full-precision Krylov."""
+    band = jnp.asarray(random_banded(512, 8, d=1.0, seed=4), jnp.float32)
+    dense = np.asarray(band_to_dense(band))
+    xstar = np.random.default_rng(2).normal(size=512)
+    b = jnp.asarray(dense @ xstar, jnp.float32)
+    sol = solve_banded(
+        band, b,
+        SaPOptions(p=8, variant="C", tol=1e-5, precond_dtype="bfloat16",
+                   maxiter=300),
+    )
+    assert sol.converged
+    err = np.linalg.norm(np.asarray(sol.x) - xstar) / np.linalg.norm(xstar)
+    assert err < 0.01  # paper's 1% accuracy criterion (bf16 preconditioner)
+
+
+def test_sparse_pipeline_end_to_end():
+    csr = random_sparse(300, avg_nnz_per_row=5.0, d=1.5, shuffle=True, seed=5)
+    dense = csr.to_dense()
+    xstar = np.asarray(random_rhs(300))
+    b = dense @ xstar
+    sol = solve_sparse(csr, b, SaPOptions(p=4, variant="C", tol=1e-8))
+    assert sol.converged
+    # paper's accuracy criterion (Sec 4.3.3): ||x-x*||/||x*|| <= 1%
+    err = np.linalg.norm(sol.x - xstar) / np.linalg.norm(xstar)
+    assert err < 0.01
+    assert sol.info["k_after_reorder"] < 20  # reordering recovered the band
+
+
+def test_sparse_with_dropoff_still_converges():
+    csr = random_sparse(300, avg_nnz_per_row=6.0, d=2.0, shuffle=True, seed=6)
+    dense = csr.to_dense()
+    xstar = np.random.default_rng(3).normal(size=300)
+    sol = solve_sparse(
+        csr, dense @ xstar,
+        SaPOptions(p=4, variant="C", tol=1e-8, drop_tol=0.02),
+    )
+    assert sol.converged
+    err = np.linalg.norm(sol.x - xstar) / np.linalg.norm(xstar)
+    assert err < 0.01
+
+
+def test_sparse_db_essential_for_zero_diagonal():
+    """A matrix with a scrambled (zero) diagonal requires DB to factor."""
+    csr = random_sparse(200, d=2.0, shuffle=True, seed=7)
+    rng = np.random.default_rng(8)
+    row_perm = rng.permutation(200)
+    from repro.core.reorder import permute_rows
+
+    scrambled = permute_rows(csr, row_perm)
+    dense = scrambled.to_dense()
+    xstar = rng.normal(size=200)
+    sol = solve_sparse(
+        scrambled, dense @ xstar, SaPOptions(p=4, variant="C", tol=1e-8)
+    )
+    assert sol.converged
+    err = np.linalg.norm(sol.x - xstar) / np.linalg.norm(xstar)
+    assert err < 0.01
