@@ -58,7 +58,7 @@ def bench_scan_kernels(report: Report):
 
 
 def bench_lm_steps(report: Report):
-    from repro.configs import ARCHS, get_config
+    from repro.configs import get_config
     from repro.models import get_family
 
     rng = jax.random.PRNGKey(0)

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SaPOptions, solve_banded
+from repro.core import SaPOptions, factor, plan_banded, solve_banded
 from repro.core.banded import band_matvec, band_to_block_tridiag, random_banded
 from repro.core.block_lu import btf_ref, bts_ref
 
@@ -20,29 +20,10 @@ from .common import Report, timeit
 
 
 def _make_cached_solver(band, opts):
-    """Build the preconditioner + closures ONCE so repeated calls hit the
-    jit cache -- separates execution time from trace/compile/setup time."""
-    from repro.core.banded import band_to_block_tridiag
-    from repro.core.krylov import bicgstab2
-    from repro.core.spike import build_preconditioner
-
-    k = (band.shape[1] - 1) // 2
-    bt = band_to_block_tridiag(band, max(k, 1), opts.p)
-    pc = build_preconditioner(bt, variant=opts.variant)
-    n_pad = bt.n_pad
-
-    def matvec(x):
-        return band_matvec(band, x)
-
-    def precond(r):
-        rp = jnp.concatenate([r, jnp.zeros((n_pad - r.shape[0],), r.dtype)])
-        return pc.apply(rp)[: r.shape[0]]
-
-    def solve(b):
-        return bicgstab2(matvec, b, precond=precond, tol=opts.tol,
-                         maxiter=opts.maxiter).x
-
-    return solve
+    """Factor ONCE via the lifecycle API so repeated calls hit the jit
+    cache -- separates execution time from plan/factor/compile time."""
+    fac = factor(plan_banded(band, opts))
+    return lambda b: fac.solve(b).x
 
 
 def _system(n, k, d, seed=0):
@@ -128,7 +109,46 @@ def bench_nk_sweep(report: Report):
                 )
 
 
+def bench_amortization(report: Report, nrhs: int = 16):
+    """Factor-once/solve-many vs re-planning per RHS (the lifecycle win).
+
+    The one-shot path re-runs plan + factor + Krylov for every RHS; the
+    lifecycle path factors once and amortizes it over ``nrhs`` batched
+    solves (paper Fig. 3.1: T_DB..T_LU paid once, T_Kry per solve).
+    """
+    import jax
+
+    jax.clear_caches()
+    n, k = 4096, 16
+    band, b, xstar = _system(n, k, 1.0)
+    rng = np.random.default_rng(7)
+    xs = rng.normal(size=(n, nrhs))
+    bmat = jnp.asarray(
+        np.asarray(band_matvec(band, jnp.asarray(xs, jnp.float32))), jnp.float32
+    )
+    opts = SaPOptions(p=8, variant="C", tol=1e-6, maxiter=200)
+
+    def one_shot_all():
+        return [solve_banded(band, bmat[:, j], opts).x for j in range(nrhs)]
+
+    us_oneshot = timeit(one_shot_all, warmup=1, iters=1)
+
+    fac = factor(plan_banded(band, opts))
+    us_amortized = timeit(lambda: fac.solve_many(bmat).x, warmup=1, iters=3)
+
+    res = fac.solve_many(bmat)
+    err = np.abs(np.asarray(res.x) - xs).max()
+    report.add(f"lifecycle/one_shot_x{nrhs}", us_oneshot, "replan per RHS")
+    report.add(
+        f"lifecycle/factor_once_x{nrhs}",
+        us_amortized,
+        f"speedup={us_oneshot / us_amortized:.1f}x;maxerr={err:.1e};"
+        f"conv={bool(res.converged.all())}",
+    )
+
+
 def run(report: Report):
     bench_p_sweep(report)
     bench_d_sweep(report)
     bench_nk_sweep(report)
+    bench_amortization(report)

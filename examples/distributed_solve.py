@@ -20,16 +20,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import SaPOptions, factor, plan_banded
 from repro.core.banded import band_to_dense, random_banded
 from repro.core.distributed import build_dist_sap, solve_step_fn
+from repro.launch.mesh import make_test_mesh
 
 
 def main():
     ndev = len(jax.devices())
-    mesh = jax.make_mesh(
-        (2, ndev // 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = make_test_mesh((2, ndev // 2), ("data", "model"))
     print(f"mesh: {dict(mesh.shape)} ({ndev} devices)")
 
     n, k = 4096, 12
@@ -53,6 +52,18 @@ def main():
             f"  SaP-{variant}: P={ndev*2} partitions  iters={float(its):5.2f}"
             f"  relerr={err:.2e}"
         )
+
+    # single-device lifecycle reference: factor once, reuse the handle
+    fac = factor(
+        plan_banded(
+            jnp.asarray(band, jnp.float32),
+            SaPOptions(p=8, variant="C", tol=1e-6, maxiter=300),
+        )
+    )
+    res = fac.solve(jnp.asarray(b, jnp.float32))
+    err = np.linalg.norm(np.asarray(res.x) - xstar) / np.linalg.norm(xstar)
+    print(f"  lifecycle reference (1 device): iters={float(res.iterations):5.2f}"
+          f"  relerr={err:.2e}")
     print("distributed solve OK (preconditioner comms: neighbor ppermute only)")
 
 

@@ -1,17 +1,26 @@
-"""Quickstart: solve dense banded and sparse systems with SaP::TPU.
+"""Quickstart: the plan/factor/solve lifecycle of SaP::TPU.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SaPOptions, solve_banded, solve_sparse
+from repro.core import (
+    SaPOptions,
+    factor,
+    plan,
+    plan_banded,
+    solve_banded,
+    solve_sparse,
+)
 from repro.core.banded import band_to_dense, random_banded, random_rhs
 from repro.core.sparse import random_sparse
 
@@ -25,14 +34,40 @@ def dense_banded_demo():
     b = jnp.asarray(dense @ xstar, jnp.float32)
 
     for variant in ("C", "D"):
-        sol = solve_banded(
-            band, b, SaPOptions(p=8, variant=variant, tol=1e-6)
-        )
-        err = np.linalg.norm(np.asarray(sol.x) - xstar) / np.linalg.norm(xstar)
+        fac = factor(plan_banded(band, SaPOptions(p=8, variant=variant, tol=1e-6)))
+        res = fac.solve(b)
+        err = np.linalg.norm(np.asarray(res.x) - xstar) / np.linalg.norm(xstar)
         print(
-            f"  SaP-{variant}: iters={sol.iterations:5.2f}  "
-            f"relerr={err:.2e}  converged={sol.converged}"
+            f"  SaP-{variant}: iters={float(res.iterations):5.2f}  "
+            f"relerr={err:.2e}  converged={bool(res.converged)}"
         )
+
+
+def amortization_demo():
+    print("== factor once, solve many (the lifecycle win) ==")
+    n, k, nrhs = 4096, 16, 16
+    band = jnp.asarray(random_banded(n, k, d=1.0, seed=2), jnp.float32)
+    dense = np.asarray(band_to_dense(band))
+    xs = np.random.default_rng(2).normal(size=(n, nrhs))
+    bmat = jnp.asarray(dense @ xs, jnp.float32)
+    opts = SaPOptions(p=8, variant="C", tol=1e-6)
+
+    t0 = time.perf_counter()
+    for j in range(nrhs):
+        solve_banded(band, bmat[:, j], opts)  # re-plans + re-factors each call
+    t_oneshot = time.perf_counter() - t0
+
+    fac = factor(plan_banded(band, opts))  # expensive stages paid once
+    jax.block_until_ready(fac.solve_many(bmat).x)  # warm the jit cache
+    t0 = time.perf_counter()
+    res = fac.solve_many(bmat)
+    jax.block_until_ready(res.x)
+    t_amortized = time.perf_counter() - t0
+
+    err = np.abs(np.asarray(res.x) - xs).max()
+    print(f"  one-shot x{nrhs}:      {t_oneshot*1e3:8.1f} ms")
+    print(f"  factor-once x{nrhs}:   {t_amortized*1e3:8.1f} ms "
+          f"({t_oneshot/t_amortized:.1f}x, maxerr={err:.1e})")
 
 
 def sparse_demo():
@@ -40,11 +75,14 @@ def sparse_demo():
     csr = random_sparse(2000, avg_nnz_per_row=6.0, d=1.2, shuffle=True, seed=1)
     xstar = np.asarray(random_rhs(2000))
     b = csr.to_dense() @ xstar
-    sol = solve_sparse(csr, b, SaPOptions(p=8, variant="C", tol=1e-8))
-    err = np.linalg.norm(sol.x - xstar) / np.linalg.norm(xstar)
+
+    pl = plan(csr, SaPOptions(p=8, variant="C", tol=1e-8))
+    fac = factor(pl)
+    res = fac.solve(jnp.asarray(b, jnp.float32))
+    err = np.linalg.norm(np.asarray(res.x) - xstar) / np.linalg.norm(xstar)
     print(
-        f"  K after DB+CM reordering: {sol.info['k_after_reorder']}  "
-        f"iters={sol.iterations:.2f}  relerr={err:.2e}"
+        f"  K after DB+CM reordering: {pl.info['k_after_reorder']}  "
+        f"iters={float(res.iterations):.2f}  relerr={err:.2e}"
     )
     sol2 = solve_sparse(
         csr, b, SaPOptions(p=8, variant="C", tol=1e-8, drop_tol=0.02)
@@ -56,5 +94,6 @@ def sparse_demo():
 
 if __name__ == "__main__":
     dense_banded_demo()
+    amortization_demo()
     sparse_demo()
     print("quickstart OK")

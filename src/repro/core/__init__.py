@@ -3,6 +3,10 @@
 The paper's contribution (Li, Serban, Negrut 2015) as a composable JAX
 module: banded storage, block-tridiagonal factorization, truncated-SPIKE
 preconditioning, Krylov solvers, and the DB/CM reordering front end.
+
+Public solver API is the plan/factor/solve lifecycle in ``sap``:
+``factor(plan(A, opts)).solve(b)`` -- analysis and factorization run once,
+solves are pure JAX and amortize across right-hand sides.
 """
 
 from .banded import (
@@ -17,30 +21,54 @@ from .banded import (
     random_rhs,
 )
 from .block_lu import BTFactors, btf_ref, btf_ul_ref, bts_ref, gj_inverse
-from .krylov import KrylovResult, bicgstab2, cg
-from .sap import SaPOptions, SaPSolution, solve_banded, solve_sparse
+from .krylov import KrylovResult, bicgstab2, bicgstab2_many, cg, cg_many
+from .operators import BandedOperator, CsrOperator, LinearOperator, as_operator
+from .sap import (
+    SaPFactorization,
+    SaPOptions,
+    SaPPlan,
+    SaPSolution,
+    SaPSolveResult,
+    factor,
+    plan,
+    plan_banded,
+    solve_banded,
+    solve_sparse,
+)
 from .spike import SaPPreconditioner, build_preconditioner
 
 __all__ = [
+    "BandedOperator",
     "BlockTridiag",
     "BTFactors",
+    "CsrOperator",
     "KrylovResult",
+    "LinearOperator",
+    "SaPFactorization",
     "SaPOptions",
+    "SaPPlan",
     "SaPPreconditioner",
     "SaPSolution",
+    "SaPSolveResult",
+    "as_operator",
     "band_matvec",
     "band_to_block_tridiag",
     "band_to_dense",
     "bicgstab2",
+    "bicgstab2_many",
     "btf_ref",
     "btf_ul_ref",
     "bts_ref",
     "build_preconditioner",
     "cg",
+    "cg_many",
     "dense_to_band",
+    "factor",
     "gj_inverse",
     "pad_banded",
     "padded_partition_size",
+    "plan",
+    "plan_banded",
     "random_banded",
     "random_rhs",
     "solve_banded",

@@ -23,13 +23,13 @@ axis prove the pod-level sharding in the dry-run.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
 from .banded import pad_banded
 from .block_lu import DEFAULT_BOOST, btf_ref, btf_ul_ref, bts_ref, gj_inverse
 from .krylov import bicgstab2
@@ -50,14 +50,14 @@ def n_devices(mesh) -> int:
 
 def _shift_from_next(x, axes):
     """Each device receives the value owned by device (idx+1); last gets 0."""
-    n = jax.lax.axis_size(axes)
+    n = axis_size(axes)
     perm = [(i + 1, i) for i in range(n - 1)]
     return jax.lax.ppermute(x, axes, perm)
 
 
 def _shift_from_prev(x, axes):
     """Each device receives the value owned by device (idx-1); first gets 0."""
-    n = jax.lax.axis_size(axes)
+    n = axis_size(axes)
     perm = [(i, i + 1) for i in range(n - 1)]
     return jax.lax.ppermute(x, axes, perm)
 
@@ -205,7 +205,7 @@ def build_dist_sap(
         def apply_local(lu, v_bot, w_next, rbar_inv, b_next, c_prev, rb):
             return bts_ref(lu, rb)
 
-    fac_fn = jax.shard_map(
+    fac_fn = shard_map(
         fac_local,
         mesh=mesh,
         in_specs=(part_spec,) * 5,
@@ -213,7 +213,7 @@ def build_dist_sap(
         check_vma=False,
     )
 
-    apply_fn = jax.shard_map(
+    apply_fn = shard_map(
         apply_local,
         mesh=mesh,
         in_specs=(part_spec,) * 7,
@@ -221,7 +221,7 @@ def build_dist_sap(
         check_vma=False,
     )
 
-    mv_fn = jax.shard_map(
+    mv_fn = shard_map(
         lambda band, x: _local_matvec(band, x, k, axes),
         mesh=mesh,
         in_specs=(part_spec, part_spec),

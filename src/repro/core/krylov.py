@@ -10,19 +10,28 @@ Tables 4.1 / 4.2.
 Mixed precision (paper Sec. 3.1): the preconditioner apply runs in its own
 (lower) storage dtype; the outer iteration runs in the dtype of ``b``.
 
+``matvec`` / ``precond`` may be plain callables or anything exposing a
+``.matvec`` method (a :class:`repro.core.operators.LinearOperator`).
+Multi-RHS systems use :func:`bicgstab2_many` / :func:`cg_many`, which vmap
+the solver over a trailing batch axis of ``b`` -- each column converges
+independently (converged columns freeze while stragglers iterate).
+
 Everything is expressed with ``jax.lax.while_loop`` so it stays on-device
-and can be jitted / sharded.
+and can be jitted / sharded.  The underscore ``_*_impl`` variants are the
+unjitted bodies, for embedding inside an enclosing jit (e.g. the
+``SaPFactorization.solve`` path) without nested-jit cache churn.
 """
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
 
-MatVec = Callable[[jax.Array], jax.Array]
+from .operators import LinearOperator, as_matvec
+
+MatVec = Union[Callable[[jax.Array], jax.Array], LinearOperator]
 
 
 class KrylovResult(NamedTuple):
@@ -45,8 +54,7 @@ def _dot(a, b):
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("matvec", "precond", "maxiter"))
-def bicgstab2(
+def _bicgstab2_impl(
     matvec: MatVec,
     b: jax.Array,
     precond: MatVec = _identity,
@@ -54,7 +62,7 @@ def bicgstab2(
     tol: float = 1e-10,
     maxiter: int = 500,
 ) -> KrylovResult:
-    """BiCGStab(2) with left preconditioning.
+    """BiCGStab(2) with left preconditioning (unjitted body).
 
     One outer "iteration" = two matvec+precond in the BiCG part plus two in
     the MR part, counted as 4 quarter-exits to mirror the paper's tables.
@@ -163,13 +171,29 @@ def bicgstab2(
     return KrylovResult(x=x, iterations=it, resnorm=rnorm / bnorm, converged=done)
 
 
+_bicgstab2_jit = jax.jit(
+    _bicgstab2_impl, static_argnames=("matvec", "precond", "maxiter")
+)
+
+
+def bicgstab2(
+    matvec: MatVec,
+    b: jax.Array,
+    precond: MatVec = _identity,
+    x0: jax.Array | None = None,
+    tol: float = 1e-10,
+    maxiter: int = 500,
+) -> KrylovResult:
+    """Jitted BiCGStab(2); accepts callables or LinearOperators."""
+    return _bicgstab2_jit(as_matvec(matvec), b, as_matvec(precond), x0, tol, maxiter)
+
+
 # ---------------------------------------------------------------------------
 # Preconditioned CG (paper: used when A is SPD)
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("matvec", "precond", "maxiter"))
-def cg(
+def _cg_impl(
     matvec: MatVec,
     b: jax.Array,
     precond: MatVec = _identity,
@@ -220,3 +244,54 @@ def cg(
         resnorm=jnp.linalg.norm(r) / bnorm,
         converged=done,
     )
+
+
+_cg_jit = jax.jit(_cg_impl, static_argnames=("matvec", "precond", "maxiter"))
+
+
+def cg(
+    matvec: MatVec,
+    b: jax.Array,
+    precond: MatVec = _identity,
+    x0: jax.Array | None = None,
+    tol: float = 1e-10,
+    maxiter: int = 1000,
+) -> KrylovResult:
+    """Jitted preconditioned CG; accepts callables or LinearOperators."""
+    return _cg_jit(as_matvec(matvec), b, as_matvec(precond), x0, tol, maxiter)
+
+
+# ---------------------------------------------------------------------------
+# Multi-RHS: vmap a single-RHS solver over a trailing batch axis of b
+# ---------------------------------------------------------------------------
+
+
+def _vmap_rhs(impl, default_maxiter):
+    out_axes = KrylovResult(x=1, iterations=0, resnorm=0, converged=0)
+
+    def many(
+        matvec: MatVec,
+        b: jax.Array,
+        precond: MatVec = _identity,
+        x0: jax.Array | None = None,
+        tol: float = 1e-10,
+        maxiter: int = default_maxiter,
+    ) -> KrylovResult:
+        """Solve A X = B for B of shape (N, R): one Krylov run per column.
+
+        Returns a KrylovResult with x (N, R) and per-column iterations /
+        resnorm / converged of shape (R,).  Unjitted: wrap in jax.jit (or
+        call via SaPFactorization.solve_many) for a cached executable.
+        """
+        mv, pc = as_matvec(matvec), as_matvec(precond)
+        if x0 is None:
+            fn = lambda bi: impl(mv, bi, pc, None, tol, maxiter)
+            return jax.vmap(fn, in_axes=1, out_axes=out_axes)(b)
+        fn = lambda bi, xi: impl(mv, bi, pc, xi, tol, maxiter)
+        return jax.vmap(fn, in_axes=(1, 1), out_axes=out_axes)(b, x0)
+
+    return many
+
+
+bicgstab2_many = _vmap_rhs(_bicgstab2_impl, 500)
+cg_many = _vmap_rhs(_cg_impl, 1000)

@@ -1,0 +1,161 @@
+"""Linear operators: the one matvec interface the solver stack speaks.
+
+``plan`` / ``factor`` / ``solve`` (see :mod:`repro.core.sap`) exchange
+matrices exclusively through these operator objects, so the Krylov loop,
+the preconditioner assembly, and the benchmarks all see the same surface
+regardless of storage format:
+
+* :class:`BandedOperator` -- the paper's "tall and thin" (N, 2K+1) band
+  storage (Sec. 3.1); matvec is the shifted-diagonal product.
+* :class:`CsrOperator`   -- general sparse matrices in expanded-COO form
+  on device; matvec is a ``segment_sum`` gather/scatter.
+
+Both are registered JAX pytrees: they can live inside jitted functions,
+``SaPFactorization`` handles, and vmapped solves.  ``matvec`` accepts a
+single vector ``(N,)`` or a trailing-batch matrix ``(N, R)`` of
+right-hand-side columns and preserves that shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .banded import band_matvec
+
+
+class LinearOperator:
+    """Marker base class: anything with ``.n``, ``.dtype`` and ``.matvec``."""
+
+    n: int
+
+    def matvec(self, x: jax.Array) -> jax.Array:  # pragma: no cover
+        raise NotImplementedError
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.matvec(x)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("band",),
+    meta_fields=("n", "k"),
+)
+@dataclasses.dataclass(eq=False)
+class BandedOperator(LinearOperator):
+    """Dense banded matrix in (N, 2K+1) band storage."""
+
+    band: jax.Array
+    n: int
+    k: int
+
+    @classmethod
+    def from_band(cls, band) -> "BandedOperator":
+        band = jnp.asarray(band)
+        n, w = band.shape
+        return cls(band=band, n=n, k=(w - 1) // 2)
+
+    @property
+    def dtype(self):
+        return self.band.dtype
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        return band_matvec(self.band, x)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("data", "rows", "cols"),
+    meta_fields=("n",),
+)
+@dataclasses.dataclass(eq=False)
+class CsrOperator(LinearOperator):
+    """Sparse matrix as device-resident expanded COO (rows, cols, data)."""
+
+    data: jax.Array  # (nnz,)
+    rows: jax.Array  # (nnz,) int32 row id per entry
+    cols: jax.Array  # (nnz,) int32 column index per entry
+    n: int
+
+    @classmethod
+    def from_csr(cls, csr, dtype=None) -> "CsrOperator":
+        """Build from a host-side :class:`repro.core.sparse.CSR`.
+
+        ``dtype`` defaults to the canonical float dtype (float64 only when
+        x64 is enabled) -- NOT a hard-coded float32, so f64 sessions keep
+        full precision in the matvec.
+        """
+        if dtype is None:
+            dtype = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+        return cls(
+            data=jnp.asarray(csr.data, dtype=dtype),
+            rows=jnp.asarray(csr.row_ids(), dtype=jnp.int32),
+            cols=jnp.asarray(csr.indices, dtype=jnp.int32),
+            n=csr.n,
+        )
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        data = self.data.astype(x.dtype)
+        prod = data[:, None] * x[self.cols] if x.ndim == 2 else data * x[self.cols]
+        return jax.ops.segment_sum(prod, self.rows, num_segments=self.n)
+
+    def to_csr(self):
+        """Reconstruct a host-side CSR (sorts and merges the COO entries,
+        so operators built from unsorted triplets round-trip correctly)."""
+        from .sparse import csr_from_coo
+
+        return csr_from_coo(
+            self.n,
+            np.asarray(self.rows),
+            np.asarray(self.cols),
+            np.asarray(self.data, dtype=np.float64),
+        )
+
+
+def require_square_dense(a) -> None:
+    """Reject raw arrays that are not dense square matrices.
+
+    Band-storage (N, 2K+1) arrays are ambiguous with dense matrices, so
+    raw arrays are only accepted when square; band storage must be wrapped
+    explicitly.
+    """
+    if np.ndim(a) != 2 or a.shape[0] != a.shape[1]:
+        raise TypeError(
+            f"raw arrays must be dense square matrices, got shape "
+            f"{np.shape(a)}; use BandedOperator.from_band / plan_banded "
+            f"for (N, 2K+1) band storage"
+        )
+
+
+def as_matvec(op):
+    """Normalize an operator-or-callable into a matvec callable."""
+    if isinstance(op, LinearOperator):
+        return op.matvec
+    mv = getattr(op, "matvec", None)
+    return mv if mv is not None else op
+
+
+def as_operator(a) -> LinearOperator:
+    """Coerce ``a`` into a :class:`LinearOperator`.
+
+    Accepts an operator (returned as-is), a host CSR / scipy sparse matrix,
+    or a dense (N, N) array.  Band-storage arrays are ambiguous with dense
+    matrices -- wrap those explicitly with :meth:`BandedOperator.from_band`.
+    """
+    if isinstance(a, LinearOperator):
+        return a
+    from . import reorder as reorder_mod  # local import: no cycles
+
+    if isinstance(a, jax.Array):
+        a = np.asarray(a)
+    if isinstance(a, np.ndarray):
+        require_square_dense(a)
+    return CsrOperator.from_csr(reorder_mod.to_csr(a))

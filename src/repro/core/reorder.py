@@ -26,14 +26,91 @@ stages partially on the CPU (hybrid strategy, Sec. 3.2-3.3).
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 
 from .sparse import CSR, csr_from_coo, csr_from_dense
 
 INF = np.inf
+
+
+@dataclasses.dataclass
+class ReorderPlan:
+    """Host-side result of the DB/CM/drop-off analysis (paper Fig. 3.1).
+
+    The permutations are stored once here and applied/undone inside the
+    device-side solve; re-running the analysis per right-hand side is the
+    exact waste the plan/factor/solve lifecycle removes.
+
+    csr     : fully reordered matrix (the Krylov matvec ordering)
+    b_perm  : composed RHS permutation, ``b_reordered = b[b_perm]``
+    x_perm  : inverse unknown permutation, ``x = x_reordered[x_perm]``
+    k       : preconditioner half bandwidth (after drop-off, >= 1)
+    band_pc : (N, 2K+1) band assembly of the preconditioner matrix
+    info    : stage diagnostics (k_after_reorder, k_after_drop, ...)
+    """
+
+    csr: CSR
+    b_perm: np.ndarray
+    x_perm: np.ndarray
+    k: int
+    band_pc: np.ndarray
+    info: dict
+
+
+def analyze(
+    a,
+    use_db: bool = True,
+    use_cm: bool = True,
+    drop_tol: float = 0.0,
+) -> ReorderPlan:
+    """Run the sparse front end once: DB -> CM -> drop-off -> band assembly.
+
+    Pipeline stages T_DB .. T_Asmbl of paper Fig. 3.1.  Drop-off only
+    affects the preconditioner band; ``csr`` keeps every element so the
+    Krylov matvec uses the exact (reordered) matrix.
+    """
+    csr = to_csr(a)
+    n = csr.n
+    info: dict = {}
+
+    if use_db:
+        row_perm = diagonal_boosting(csr)
+        csr = permute_rows(csr, row_perm)
+        info["db"] = True
+    else:
+        row_perm = np.arange(n)
+        info["db"] = False
+
+    if use_cm:
+        sym_perm = cuthill_mckee(symmetrize(csr))
+        csr = permute_symmetric(csr, sym_perm)
+        info["cm"] = True
+    else:
+        sym_perm = np.arange(n)
+        info["cm"] = False
+
+    k_full = half_bandwidth(csr)
+    info["k_after_reorder"] = k_full
+
+    csr_pc = csr
+    k = k_full
+    if drop_tol > 0.0:
+        csr_pc, k = drop_off(csr, drop_tol)
+        info["k_after_drop"] = k
+    k = max(k, 1)
+
+    return ReorderPlan(
+        csr=csr,
+        b_perm=row_perm[sym_perm],
+        x_perm=np.argsort(sym_perm),
+        k=k,
+        band_pc=csr_to_band(csr_pc, k),
+        info=info,
+    )
 
 
 def to_csr(a) -> CSR:

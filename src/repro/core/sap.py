@@ -1,41 +1,63 @@
-"""SaP::TPU high-level solver API.
+"""SaP::TPU solver API: the plan / factor / solve lifecycle.
 
-``solve_banded``  : dense banded systems (paper Sec. 2.1 / 4.1).
-``solve_sparse``  : sparse systems via DB + CM reordering, drop-off and the
-                    sparse->dense-banded fallback (paper Sec. 2.2 / 4.3).
+The paper's economics (Fig. 3.1) are: pay once for the expensive stages --
+DB reordering (T_DB), CM reordering (T_CM), drop-off (T_Drop), banded
+assembly (T_Asmbl) and the split block-LU + SPIKE factorization (T_LU) --
+then amortize them over a cheap preconditioned Krylov iteration per
+right-hand side (T_Kry).  The public API mirrors that lifecycle:
 
-The solver is a Krylov method (BiCGStab(2), or CG for SPD systems)
-preconditioned by the split-and-parallelize factorization:
+1. ``plan(A, opts) -> SaPPlan``
+       Host-side analysis.  Accepts a :class:`~repro.core.operators.
+       LinearOperator`, a host CSR / scipy matrix, or a dense square
+       array; band storage goes through :func:`plan_banded`.  Computes the
+       DB/CM permutations, drop-off, bandwidth, and the preconditioner
+       band exactly once; permutations become part of the plan.
 
-  * variant "D" (decoupled): block-diagonal solve only.
-  * variant "C" (coupled):   truncated-SPIKE correction (Sec. 2.1).
+2. ``factor(plan) -> SaPFactorization``
+       Device-side block-LU + truncated-SPIKE coupling (paper Sec. 2.1).
+       The result is a registered JAX pytree: it can be passed through
+       ``jax.jit`` boundaries, stored, and reused across any number of
+       right-hand sides.
 
-Semantics mirror the paper: the Krylov matvec always uses the *original*
-(reordered) matrix; drop-off and the banded approximation only affect the
-preconditioner.  Mixed precision (Sec. 3.1): the preconditioner is factored
-and applied in ``precond_dtype`` (float32 default, bfloat16 on TPU) while
-the outer Krylov iteration runs in the dtype of the inputs.
+3. ``factorization.solve(b)`` / ``factorization.solve_many(B)``
+       Pure JAX, jit-cached, vmap-compatible.  ``solve`` takes one RHS of
+       shape (N,); ``solve_many`` takes (N, R) and runs an independent
+       Krylov iteration per column (converged columns freeze while
+       stragglers iterate).  Permutations are applied and undone inside.
+
+The Krylov matvec always uses the *original* (reordered) matrix; drop-off
+and the banded approximation only affect the preconditioner.  Mixed
+precision (Sec. 3.1): the preconditioner is factored and applied in
+``opts.precond_dtype`` while the outer iteration runs in the dtype of the
+input RHS (override with ``opts.iter_dtype``).
+
+``solve_banded`` and ``solve_sparse`` remain as thin one-shot wrappers for
+backwards compatibility.  They re-run the whole pipeline on every call and
+are **deprecated** for repeated solves -- use the lifecycle above when the
+operator is reused.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from functools import partial
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import reorder as reorder_mod
-from .banded import (
-    band_matvec,
-    band_to_block_tridiag,
-    pad_banded,
-    padded_partition_size,
-)
+from .banded import band_to_block_tridiag
 from .block_lu import DEFAULT_BOOST
-from .krylov import KrylovResult, bicgstab2, cg
-from .spike import build_preconditioner
+from .krylov import KrylovResult, _bicgstab2_impl, _cg_impl
+from .operators import (
+    BandedOperator,
+    CsrOperator,
+    LinearOperator,
+    require_square_dense,
+)
+from .spike import SaPPreconditioner, build_preconditioner
 
 
 @dataclasses.dataclass
@@ -46,6 +68,7 @@ class SaPOptions:
     maxiter: int = 500
     boost_eps: float = DEFAULT_BOOST
     precond_dtype: str = "float32"
+    iter_dtype: Optional[str] = None  # Krylov dtype; None = follow the RHS
     use_cg: bool = False  # CG for SPD systems
     # sparse front-end (Sec. 2.2)
     use_db: bool = True  # diagonal-boosting reordering
@@ -56,6 +79,8 @@ class SaPOptions:
 
 @dataclasses.dataclass
 class SaPSolution:
+    """Legacy one-shot result (``solve_banded`` / ``solve_sparse``)."""
+
     x: np.ndarray | jax.Array
     iterations: float
     resnorm: float
@@ -64,41 +89,267 @@ class SaPSolution:
     info: dict
 
 
+class SaPSolveResult(NamedTuple):
+    """Result of a lifecycle solve; a pytree of device arrays.
+
+    For ``solve_many``, ``x`` is (N, R) and the diagnostics are (R,).
+    """
+
+    x: jax.Array
+    iterations: jax.Array
+    resnorm: jax.Array
+    converged: jax.Array
+
+
 def _precond_dtype(opts: SaPOptions):
     return {"float32": jnp.float32, "float64": jnp.float64, "bfloat16": jnp.bfloat16}[
         opts.precond_dtype
     ]
 
 
-def _krylov_solve(
-    matvec: Callable[[jax.Array], jax.Array],
-    b_pad: jax.Array,
-    band_pc: jax.Array,
-    k: int,
-    opts: SaPOptions,
-):
-    """Factor the SaP preconditioner from ``band_pc`` and run Krylov."""
-    bt = band_to_block_tridiag(band_pc, max(k, 1), opts.p)
+def _resolve_iter_dtype(b_dtype, iter_dtype: Optional[str]):
+    """Krylov iteration dtype: explicit option > RHS dtype > canonical float.
+
+    Never silently requests float64 in a non-x64 session (jax would
+    truncate it anyway); integer/bool RHS promote to the canonical float.
+    """
+    x64 = jax.config.read("jax_enable_x64")
+    if iter_dtype is not None:
+        dt = np.dtype(iter_dtype)
+    elif jnp.issubdtype(b_dtype, jnp.floating):
+        dt = np.dtype(b_dtype)
+    else:
+        dt = np.dtype(np.float64 if x64 else np.float32)
+    if dt == np.dtype(np.float64) and not x64:
+        dt = np.dtype(np.float32)
+    return dt
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: plan (host-side analysis; runs the reordering pipeline once)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SaPPlan:
+    """Host-side analysis result: operator + permutations + precond band.
+
+    op      : reordered operator the Krylov matvec uses
+    band_pc : (N, 2K+1) preconditioner band (post drop-off), device array
+    k       : preconditioner half bandwidth
+    b_perm  : RHS permutation (None = identity), ``b_r = b[b_perm]``
+    x_perm  : unknown un-permutation (None = identity), ``x = x_r[x_perm]``
+    opts    : solver options the factorization will inherit
+    info    : stage diagnostics (db/cm flags, k_after_reorder, ...)
+    """
+
+    op: LinearOperator
+    band_pc: jax.Array
+    k: int
+    n: int
+    b_perm: Optional[np.ndarray]
+    x_perm: Optional[np.ndarray]
+    opts: SaPOptions
+    info: dict
+
+
+def plan_banded(band, opts: Optional[SaPOptions] = None) -> SaPPlan:
+    """Plan for a dense banded system in (N, 2K+1) band storage.
+
+    No reordering: the matrix is already banded (paper Sec. 4.1); the band
+    itself is the preconditioner matrix.
+    """
+    opts = opts or SaPOptions()
+    op = band if isinstance(band, BandedOperator) else BandedOperator.from_band(band)
+    return SaPPlan(
+        op=op,
+        band_pc=op.band,
+        k=op.k,
+        n=op.n,
+        b_perm=None,
+        x_perm=None,
+        opts=opts,
+        info={"variant": opts.variant, "p": opts.p},
+    )
+
+
+def plan(a, opts: Optional[SaPOptions] = None) -> SaPPlan:
+    """Plan for a general operator / sparse matrix (paper Sec. 2.2 / 4.3).
+
+    Runs DB + CM reordering and drop-off once (per ``opts``); the returned
+    plan carries the permutations, the reordered operator, and the
+    preconditioner band.  Banded operators skip the reordering front end.
+    """
+    opts = opts or SaPOptions()
+    if isinstance(a, BandedOperator):
+        return plan_banded(a, opts)
+    if isinstance(a, CsrOperator):
+        a = a.to_csr()
+    elif isinstance(a, (np.ndarray, jax.Array)):
+        require_square_dense(a)
+
+    rp = reorder_mod.analyze(
+        a, use_db=opts.use_db, use_cm=opts.use_cm, drop_tol=opts.drop_tol
+    )
+    op = CsrOperator.from_csr(rp.csr)
+    canonical = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+    return SaPPlan(
+        op=op,
+        band_pc=jnp.asarray(rp.band_pc, canonical),
+        k=rp.k,
+        n=rp.csr.n,
+        b_perm=rp.b_perm,
+        x_perm=rp.x_perm,
+        opts=opts,
+        info={**rp.info, "variant": opts.variant, "p": opts.p},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: factor (device-side block-LU + SPIKE; returns a reusable handle)
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("op", "pc", "b_perm", "x_perm"),
+    meta_fields=("n", "k", "tol", "maxiter", "use_cg", "iter_dtype"),
+)
+@dataclasses.dataclass(eq=False)
+class SaPFactorization:
+    """Reusable SaP factorization handle (a registered JAX pytree).
+
+    Holds the reordered operator, the factored preconditioner, and the
+    permutations; ``solve`` / ``solve_many`` are pure JAX and jit-cached,
+    so repeated right-hand sides pay only the Krylov iteration.
+    """
+
+    op: LinearOperator
+    pc: SaPPreconditioner
+    b_perm: Optional[jax.Array]  # int32 (N,) or None (identity)
+    x_perm: Optional[jax.Array]  # int32 (N,) or None (identity)
+    n: int
+    k: int
+    tol: float
+    maxiter: int
+    use_cg: bool
+    iter_dtype: Optional[str]
+
+    @property
+    def variant(self) -> str:
+        return self.pc.variant
+
+    @property
+    def p(self) -> int:
+        return self.pc.p
+
+    @property
+    def n_pad(self) -> int:
+        return self.pc.p * self.pc.m * self.pc.k
+
+    def solve(self, b: jax.Array) -> SaPSolveResult:
+        """Solve A x = b for a single RHS of shape (N,)."""
+        b = jnp.asarray(b)
+        if b.ndim != 1:
+            raise ValueError(
+                f"solve expects a single RHS of shape ({self.n},), got "
+                f"{b.shape}; use solve_many for batched (N, R) systems"
+            )
+        if b.shape[0] != self.n:
+            raise ValueError(f"RHS length {b.shape[0]} != operator size {self.n}")
+        return _solve_one(self, b)
+
+    def solve_many(self, b: jax.Array) -> SaPSolveResult:
+        """Solve A X = B for B of shape (N, R): one Krylov run per column."""
+        b = jnp.asarray(b)
+        if b.ndim != 2:
+            raise ValueError(
+                f"solve_many expects shape ({self.n}, R), got {b.shape}; "
+                f"use solve for a single (N,) RHS"
+            )
+        if b.shape[0] != self.n:
+            raise ValueError(f"RHS length {b.shape[0]} != operator size {self.n}")
+        return _solve_many(self, b)
+
+
+def factor(pl: SaPPlan) -> SaPFactorization:
+    """Factor the SaP preconditioner from a plan (T_LU .. T_SPIKE).
+
+    Device-side and done once; the returned handle is reusable across any
+    number of ``solve`` / ``solve_many`` calls and jit boundaries.
+    """
+    opts = pl.opts
+    bt = band_to_block_tridiag(pl.band_pc, max(pl.k, 1), opts.p)
     pc = build_preconditioner(
         bt,
         variant=opts.variant,
         boost_eps=opts.boost_eps,
         precond_dtype=_precond_dtype(opts),
     )
-    n_pad_pc = bt.n_pad
+    to_idx = lambda p: None if p is None else jnp.asarray(p, jnp.int32)
+    return SaPFactorization(
+        op=pl.op,
+        pc=pc,
+        b_perm=to_idx(pl.b_perm),
+        x_perm=to_idx(pl.x_perm),
+        n=pl.n,
+        k=pl.k,
+        tol=opts.tol,
+        maxiter=opts.maxiter,
+        use_cg=opts.use_cg,
+        iter_dtype=opts.iter_dtype,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: solve (pure JAX; jit-cached module-level entry points)
+# ---------------------------------------------------------------------------
+
+
+def _solve_impl(fac: SaPFactorization, b: jax.Array) -> SaPSolveResult:
+    """Single-RHS solve body: permute, Krylov, un-permute (all on device)."""
+    dt = _resolve_iter_dtype(b.dtype, fac.iter_dtype)
+    b = b.astype(dt)
+    if fac.b_perm is not None:
+        b = b[fac.b_perm]
+
+    n, n_pad = fac.n, fac.n_pad
 
     def precond(r):
-        rp = jnp.concatenate(
-            [r, jnp.zeros((n_pad_pc - r.shape[0],), r.dtype)]
-        ) if r.shape[0] != n_pad_pc else r
-        z = pc.apply(rp)
-        return z[: r.shape[0]]
+        rp = (
+            jnp.concatenate([r, jnp.zeros((n_pad - n,), r.dtype)])
+            if n_pad != n
+            else r
+        )
+        return fac.pc.apply(rp)[:n]
 
-    solver = cg if opts.use_cg else bicgstab2
+    solver = _cg_impl if fac.use_cg else _bicgstab2_impl
     res: KrylovResult = solver(
-        matvec, b_pad, precond=precond, tol=opts.tol, maxiter=opts.maxiter
+        fac.op.matvec, b, precond=precond, tol=fac.tol, maxiter=fac.maxiter
     )
-    return res, pc
+    x = res.x[fac.x_perm] if fac.x_perm is not None else res.x
+    return SaPSolveResult(
+        x=x,
+        iterations=res.iterations,
+        resnorm=res.resnorm,
+        converged=res.converged,
+    )
+
+
+_solve_one = jax.jit(_solve_impl)
+
+
+@jax.jit
+def _solve_many(fac: SaPFactorization, bmat: jax.Array) -> SaPSolveResult:
+    out_axes = SaPSolveResult(x=1, iterations=0, resnorm=0, converged=0)
+    return jax.vmap(lambda bi: _solve_impl(fac, bi), in_axes=1, out_axes=out_axes)(
+        bmat
+    )
+
+
+# ---------------------------------------------------------------------------
+# Legacy one-shot wrappers (deprecated for repeated solves)
+# ---------------------------------------------------------------------------
 
 
 def solve_banded(
@@ -106,38 +357,22 @@ def solve_banded(
     b: jax.Array,
     opts: Optional[SaPOptions] = None,
 ) -> SaPSolution:
-    """Solve a dense banded system given in (N, 2K+1) band storage."""
-    opts = opts or SaPOptions()
-    band = jnp.asarray(band)
-    b = jnp.asarray(b)
-    n, w = band.shape
-    k = (w - 1) // 2
+    """One-shot solve of a dense banded system in (N, 2K+1) band storage.
 
-    res, pc = _krylov_solve(
-        lambda x: band_matvec(band, x), b, band, k, opts
-    )
+    Deprecated for repeated solves: this re-plans and re-factors on every
+    call.  Use ``factor(plan_banded(band, opts))`` and reuse the handle.
+    """
+    pl = plan_banded(band, opts)
+    fac = factor(pl)
+    res = fac.solve(jnp.asarray(b))
     return SaPSolution(
         x=res.x,
         iterations=float(res.iterations),
         resnorm=float(res.resnorm),
         converged=bool(res.converged),
-        k=k,
-        info={"variant": pc.variant, "p": opts.p},
+        k=fac.k,
+        info={"variant": fac.variant, "p": pl.opts.p},
     )
-
-
-def _csr_matvec_fn(csr) -> Callable[[jax.Array], jax.Array]:
-    rows = jnp.asarray(csr.row_ids())
-    cols = jnp.asarray(csr.indices)
-    data = jnp.asarray(csr.data, dtype=jnp.float32)
-    n = csr.n
-
-    def matvec(x):
-        return jax.ops.segment_sum(
-            data.astype(x.dtype) * x[cols], rows, num_segments=n
-        )
-
-    return matvec
 
 
 def solve_sparse(
@@ -145,66 +380,20 @@ def solve_sparse(
     b: np.ndarray,
     opts: Optional[SaPOptions] = None,
 ) -> SaPSolution:
-    """Solve a sparse system (CSR-like) via the reorder + banded pipeline.
+    """One-shot solve of a sparse system via the reorder + banded pipeline.
 
-    Pipeline (paper Fig. 3.1): DB reordering (T_DB) -> CM reordering (T_CM)
-    -> optional drop-off (T_Drop) -> banded assembly (T_Asmbl) -> SaP
-    factorization + Krylov (T_LU .. T_Kry) -> un-permute.
+    Deprecated for repeated solves: this re-runs DB/CM reordering and the
+    block-LU factorization on every call.  Use ``factor(plan(a, opts))``
+    and reuse the handle across right-hand sides.
     """
-    opts = opts or SaPOptions()
-    info: dict = {}
-
-    csr = reorder_mod.to_csr(a_csr)
-    n = csr.n
-    b = np.asarray(b, dtype=np.float64)
-
-    # --- stage 1: diagonal boosting (row permutation) ----------------------
-    if opts.use_db:
-        row_perm = reorder_mod.diagonal_boosting(csr)
-        csr = reorder_mod.permute_rows(csr, row_perm)
-        b_r = b[row_perm]
-        info["db"] = True
-    else:
-        b_r = b
-        info["db"] = False
-
-    # --- stage 2: CM bandwidth reduction (symmetric permutation) -----------
-    if opts.use_cm:
-        sym_perm = reorder_mod.cuthill_mckee(reorder_mod.symmetrize(csr))
-        csr = reorder_mod.permute_symmetric(csr, sym_perm)
-        b_r = b_r[sym_perm]
-        info["cm"] = True
-    else:
-        sym_perm = np.arange(n)
-        info["cm"] = False
-
-    k_full = reorder_mod.half_bandwidth(csr)
-    info["k_after_reorder"] = k_full
-
-    # --- stage 3: optional drop-off (preconditioner only) ------------------
-    csr_pc = csr
-    k = k_full
-    if opts.drop_tol > 0.0:
-        csr_pc, k = reorder_mod.drop_off(csr, opts.drop_tol)
-        info["k_after_drop"] = k
-    k = max(k, 1)
-
-    # --- stage 4: banded assembly + solve -----------------------------------
-    band_pc = reorder_mod.csr_to_band(csr_pc, k)
-    dtype = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
-    b_j = jnp.asarray(b_r, dtype=dtype)
-    matvec = _csr_matvec_fn(csr)
-    res, pc = _krylov_solve(matvec, b_j, jnp.asarray(band_pc, dtype), k, opts)
-
-    # --- un-permute ----------------------------------------------------------
-    x_r = np.asarray(res.x)
-    x = np.empty_like(x_r)
-    x[sym_perm] = x_r
+    pl = plan(a_csr, opts)
+    fac = factor(pl)
+    res = fac.solve(jnp.asarray(np.asarray(b)))
     return SaPSolution(
-        x=x,
+        x=np.asarray(res.x),
         iterations=float(res.iterations),
         resnorm=float(res.resnorm),
         converged=bool(res.converged),
-        k=k,
-        info={**info, "variant": pc.variant, "p": opts.p},
+        k=fac.k,
+        info={**pl.info, "variant": fac.variant, "p": pl.opts.p},
     )

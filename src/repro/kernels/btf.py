@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 from repro.core.block_lu import DEFAULT_BOOST, gj_inverse
 
 
@@ -80,7 +82,7 @@ def btf_pallas(
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((k, k), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(d, e, f)

@@ -1,0 +1,14 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
+``CompilerParams`` across jax releases; resolve whichever this jax has so
+the kernels build against both.
+"""
+
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

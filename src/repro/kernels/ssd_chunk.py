@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 
 def _ssd_kernel(x_ref, b_ref, c_ref, la_ref, s0_ref, y_ref, sout_ref, s, *, chunk):
     nc = pl.program_id(1)
@@ -87,7 +89,7 @@ def ssd_pallas(
         ],
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(x, b, c, loga, state)

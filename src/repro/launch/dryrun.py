@@ -34,7 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import optim
 from repro.configs import ARCHS, get_config
-from repro.configs.sap_solver import SOLVER_SHAPES, SolverConfig
+from repro.configs.sap_solver import SOLVER_SHAPES
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import analyze, model_flops
 from repro.models import SHAPES, get_family, supports_shape

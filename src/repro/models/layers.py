@@ -11,7 +11,6 @@ everywhere (training, prefill and decode).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

@@ -11,7 +11,6 @@ output; ReLU^2 channel mixing.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

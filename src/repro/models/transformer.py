@@ -13,7 +13,6 @@ chunked flash formulation from ``layers.py``; decode uses a KV cache
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -12,9 +12,7 @@
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
-from pathlib import Path
 from typing import Callable, Optional
 
 import jax

@@ -30,8 +30,8 @@ DIST_SAP = r"""
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.banded import random_banded, band_to_dense
 from repro.core.distributed import build_dist_sap, solve_step_fn
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((2, 4), ("data", "model"))
 n, k = 600, 6
 band = random_banded(n, k, d=1.0, seed=5)
 A = np.asarray(band_to_dense(jnp.asarray(band)))
@@ -71,8 +71,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.models import get_family
 from repro import optim
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((2, 4), ("data", "model"))
 cfg = get_config("stablelm-1.6b", reduced=True)
 fam = get_family(cfg)
 params = fam.init(cfg, jax.random.PRNGKey(0))

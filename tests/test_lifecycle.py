@@ -1,0 +1,219 @@
+"""Plan/factor/solve lifecycle tests: reuse, pytrees, batching, dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BandedOperator,
+    SaPOptions,
+    factor,
+    plan,
+    plan_banded,
+    solve_banded,
+    solve_sparse,
+)
+from repro.core.banded import band_to_dense, random_banded, random_rhs
+from repro.core.sparse import random_sparse
+
+
+def _banded_system(n=320, k=5, d=1.0, seed=11, nrhs=None):
+    band = jnp.asarray(random_banded(n, k, d=d, seed=seed), jnp.float32)
+    dense = np.asarray(band_to_dense(band))
+    rng = np.random.default_rng(seed + 1)
+    xstar = rng.normal(size=(n,) if nrhs is None else (n, nrhs))
+    b = jnp.asarray(dense @ xstar, jnp.float32)
+    return band, xstar, b
+
+
+def _sparse_system(n=300, seed=5, nrhs=None):
+    csr = random_sparse(n, avg_nnz_per_row=5.0, d=1.5, shuffle=True, seed=seed)
+    dense = csr.to_dense()
+    rng = np.random.default_rng(seed + 1)
+    xstar = rng.normal(size=(n,) if nrhs is None else (n, nrhs))
+    b = dense @ xstar
+    return csr, xstar, b
+
+
+# ---------------------------------------------------------------------------
+# factor-once / solve-many agreement with the one-shot wrappers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["C", "D"])
+def test_lifecycle_matches_one_shot_banded(variant):
+    band, xstar, b = _banded_system()
+    opts = SaPOptions(p=4, variant=variant, tol=1e-6, maxiter=300)
+    fac = factor(plan_banded(band, opts))
+    res = fac.solve(b)
+    sol = solve_banded(band, b, opts)
+    assert bool(res.converged)
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(sol.x), rtol=1e-6)
+    assert float(res.iterations) == sol.iterations
+
+
+def test_lifecycle_matches_one_shot_sparse():
+    csr, xstar, b = _sparse_system()
+    opts = SaPOptions(p=4, variant="C", tol=1e-8)
+    fac = factor(plan(csr, opts))
+    res = fac.solve(jnp.asarray(b, jnp.float32))
+    sol = solve_sparse(csr, b, opts)
+    assert bool(res.converged)
+    np.testing.assert_allclose(np.asarray(res.x), sol.x, rtol=1e-5, atol=1e-6)
+    err = np.linalg.norm(np.asarray(res.x) - xstar) / np.linalg.norm(xstar)
+    assert err < 0.01
+
+
+def test_solve_many_matches_looped_single_rhs():
+    band, xstar, b = _banded_system(nrhs=7)
+    fac = factor(plan_banded(band, SaPOptions(p=4, tol=1e-6, maxiter=300)))
+    many = fac.solve_many(b)
+    assert many.x.shape == b.shape
+    assert many.iterations.shape == (7,)
+    assert bool(many.converged.all())
+    for j in range(7):
+        one = fac.solve(b[:, j])
+        np.testing.assert_allclose(
+            np.asarray(many.x[:, j]), np.asarray(one.x), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_vmapped_solve_matches_solve_many():
+    band, xstar, b = _banded_system(nrhs=5)
+    fac = factor(plan_banded(band, SaPOptions(p=4, tol=1e-6, maxiter=300)))
+    many = fac.solve_many(b)
+    vx = jax.vmap(lambda bi: fac.solve(bi).x, in_axes=1, out_axes=1)(b)
+    np.testing.assert_allclose(np.asarray(vx), np.asarray(many.x), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pytree round-trip through jax.jit / flatten-unflatten
+# ---------------------------------------------------------------------------
+
+
+def test_factorization_pytree_roundtrip():
+    csr, xstar, b = _sparse_system()
+    fac = factor(plan(csr, SaPOptions(p=4, tol=1e-8)))
+    leaves, treedef = jax.tree_util.tree_flatten(fac)
+    assert all(isinstance(l, jax.Array) for l in leaves)
+    fac2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    r1 = fac.solve(jnp.asarray(b, jnp.float32))
+    r2 = fac2.solve(jnp.asarray(b, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(r1.x), np.asarray(r2.x))
+
+
+def test_factorization_through_jit_and_solve_many_under_jit():
+    band, xstar, b16 = _banded_system(nrhs=16)
+    fac = factor(plan_banded(band, SaPOptions(p=4, tol=1e-6, maxiter=300)))
+
+    @jax.jit
+    def solve_all(f, bb):
+        return f.solve_many(bb)
+
+    res = solve_all(fac, b16)
+    assert res.x.shape == b16.shape
+    assert bool(res.converged.all())
+    err = np.abs(np.asarray(res.x) - xstar).max()
+    assert err < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# reuse: 16 RHS against one factorization run reorder + block-LU exactly once
+# ---------------------------------------------------------------------------
+
+
+def test_factor_once_for_many_rhs(monkeypatch):
+    import repro.core.reorder as reorder_mod
+    import repro.core.spike as spike_mod
+
+    counts = {"db": 0, "cm": 0, "btf": 0}
+    real_db = reorder_mod.diagonal_boosting
+    real_cm = reorder_mod.cuthill_mckee
+    real_btf = spike_mod.btf_ref
+
+    def db(*a, **kw):
+        counts["db"] += 1
+        return real_db(*a, **kw)
+
+    def cm(*a, **kw):
+        counts["cm"] += 1
+        return real_cm(*a, **kw)
+
+    def btf(*a, **kw):
+        counts["btf"] += 1
+        return real_btf(*a, **kw)
+
+    monkeypatch.setattr(reorder_mod, "diagonal_boosting", db)
+    monkeypatch.setattr(reorder_mod, "cuthill_mckee", cm)
+    monkeypatch.setattr(spike_mod, "btf_ref", btf)
+
+    csr, xstar, b = _sparse_system(nrhs=16)
+    fac = factor(plan(csr, SaPOptions(p=4, tol=1e-8)))
+    res = fac.solve_many(jnp.asarray(b, jnp.float32))
+    assert bool(res.converged.all())
+    err = np.abs(np.asarray(res.x) - xstar).max()
+    assert err < 1e-3
+    # the expensive stages ran exactly once, not once per RHS
+    assert counts == {"db": 1, "cm": 1, "btf": 1}
+
+
+# ---------------------------------------------------------------------------
+# variant "D" + drop-off path
+# ---------------------------------------------------------------------------
+
+
+def test_lifecycle_variant_d_with_dropoff():
+    csr = random_sparse(300, avg_nnz_per_row=6.0, d=2.0, shuffle=True, seed=6)
+    xstar = np.asarray(random_rhs(300))
+    b = csr.to_dense() @ xstar
+    pl = SaPOptions(p=4, variant="D", tol=1e-8, drop_tol=0.02)
+    sp = plan(csr, pl)
+    assert "k_after_drop" in sp.info
+    assert sp.info["k_after_drop"] <= sp.info["k_after_reorder"]
+    fac = factor(sp)
+    res = fac.solve(jnp.asarray(b, jnp.float32))
+    assert bool(res.converged)
+    err = np.linalg.norm(np.asarray(res.x) - xstar) / np.linalg.norm(xstar)
+    assert err < 0.01
+
+
+# ---------------------------------------------------------------------------
+# dtype semantics (the solve follows the RHS / the iter_dtype option)
+# ---------------------------------------------------------------------------
+
+
+def test_iteration_dtype_follows_rhs():
+    band, xstar, b = _banded_system()
+    fac = factor(plan_banded(band, SaPOptions(p=4, tol=1e-4, maxiter=300)))
+    assert fac.solve(b).x.dtype == jnp.float32
+    assert fac.solve(b.astype(jnp.bfloat16)).x.dtype == jnp.bfloat16
+
+
+def test_iteration_dtype_option_overrides_rhs():
+    band, xstar, b = _banded_system()
+    opts = SaPOptions(p=4, tol=1e-4, maxiter=300, iter_dtype="float32")
+    fac = factor(plan_banded(band, opts))
+    assert fac.solve(b.astype(jnp.bfloat16)).x.dtype == jnp.float32
+
+
+def test_sparse_rhs_dtype_not_hardcoded():
+    """Regression: solve_sparse used to force the RHS to float64 and pick
+    the iteration dtype from jax_enable_x64 regardless of the input."""
+    csr, xstar, b = _sparse_system()
+    fac = factor(plan(csr, SaPOptions(p=4, tol=1e-6)))
+    res = fac.solve(jnp.asarray(b, jnp.float32))
+    assert res.x.dtype == jnp.float32
+    # integer RHS promotes to the canonical float instead of crashing
+    res_i = fac.solve(jnp.arange(csr.n, dtype=jnp.int32))
+    assert jnp.issubdtype(res_i.x.dtype, jnp.floating)
+
+
+def test_banded_operator_wrapping():
+    band, xstar, b = _banded_system()
+    op = BandedOperator.from_band(band)
+    assert op.n == band.shape[0] and op.k == (band.shape[1] - 1) // 2
+    y = op.matvec(b)
+    assert y.shape == b.shape
+    fac = factor(plan(op, SaPOptions(p=4, tol=1e-6, maxiter=300)))
+    assert bool(fac.solve(b).converged)

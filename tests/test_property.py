@@ -3,11 +3,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import SaPOptions, solve_banded
 from repro.core.banded import (
-    band_matvec,
     band_to_dense,
     dense_to_band,
     random_banded,

@@ -1,7 +1,6 @@
 """Unit tests: DB / CM reorderings, drop-off, third stage (vs scipy refs)."""
 
 import numpy as np
-import pytest
 import scipy.sparse as sp
 import scipy.sparse.csgraph as csgraph
 

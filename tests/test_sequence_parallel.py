@@ -13,9 +13,9 @@ SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
 from repro.kernels import ops, ref
 from repro.models.sequence_parallel import sp_ssd, sp_wkv6
+from repro.launch.mesh import make_test_mesh
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_test_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 B, H, T, N, Pd, D = 2, 2, 256, 8, 16, 16
 

@@ -5,10 +5,8 @@ import numpy as np
 import pytest
 
 from repro.core.banded import (
-    band_matvec,
     band_to_block_tridiag,
     block_tridiag_to_dense,
-    pad_banded,
     random_banded,
 )
 from repro.core.spike import build_preconditioner
