@@ -47,7 +47,7 @@ def _suite():
 
 
 def run(report: Report):
-    solved = {"sapC": 0, "sapD": 0, "direct": 0}
+    solved = {"sapC": 0, "sapD": 0, "sapE": 0, "sapauto": 0, "direct": 0}
     total = 0
     for name, csr in _suite():
         total += 1
@@ -79,7 +79,7 @@ def run(report: Report):
             report.add(f"tableA.2/plan/{name}", float("nan"),
                        f"error={type(e).__name__}")
 
-        for variant in ("C", "D"):
+        for variant in ("C", "D", "E", "auto"):
             t0 = time.perf_counter()
             try:
                 if pl is None:
@@ -95,7 +95,8 @@ def run(report: Report):
                 err = np.linalg.norm(x - xstar) / np.linalg.norm(xstar)
                 ok = bool(res.converged) and err <= 0.01
                 info = (f"ok={ok};iters={float(res.iterations):.2f};"
-                        f"K={fac.k};relerr={err:.1e}")
+                        f"K={fac.k};relerr={err:.1e};variant={fac.variant};"
+                        f"d_factor={float(fac.d_factor):.3f}")
             except Exception as e:  # robustness accounting, like the paper
                 us, ok, info = float("nan"), False, f"ok=False;error={type(e).__name__}"
             solved[f"sap{variant}"] += ok
@@ -104,6 +105,7 @@ def run(report: Report):
     report.add(
         "tableA.2/robustness", 0.0,
         f"sapC={solved['sapC']}/{total};sapD={solved['sapD']}/{total};"
+        f"sapE={solved['sapE']}/{total};sapAuto={solved['sapauto']}/{total};"
         f"direct={solved['direct']}/{total}",
     )
 

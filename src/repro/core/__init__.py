@@ -15,12 +15,22 @@ from .banded import (
     band_to_block_tridiag,
     band_to_dense,
     dense_to_band,
+    diag_dominance_factor,
+    oscillatory_banded,
     pad_banded,
     padded_partition_size,
     random_banded,
     random_rhs,
 )
-from .block_lu import BTFactors, btf_ref, btf_ul_ref, bts_ref, gj_inverse
+from .block_lu import (
+    BTFactors,
+    btf_chain,
+    btf_ref,
+    btf_ul_ref,
+    bts_chain,
+    bts_ref,
+    gj_inverse,
+)
 from .krylov import KrylovResult, bicgstab2, bicgstab2_many, cg, cg_many
 from .operators import BandedOperator, CsrOperator, LinearOperator, as_operator
 from .sap import (
@@ -32,6 +42,7 @@ from .sap import (
     factor,
     plan,
     plan_banded,
+    resolve_variant,
     solve_banded,
     solve_sparse,
 )
@@ -57,20 +68,25 @@ __all__ = [
     "bicgstab2",
     "bicgstab2_many",
     "btf_ref",
+    "btf_chain",
     "btf_ul_ref",
+    "bts_chain",
     "bts_ref",
     "build_preconditioner",
     "cg",
     "cg_many",
     "dense_to_band",
+    "diag_dominance_factor",
     "factor",
     "gj_inverse",
+    "oscillatory_banded",
     "pad_banded",
     "padded_partition_size",
     "plan",
     "plan_banded",
     "random_banded",
     "random_rhs",
+    "resolve_variant",
     "solve_banded",
     "solve_sparse",
 ]

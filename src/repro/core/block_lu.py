@@ -153,6 +153,30 @@ def bts_ref(factors: BTFactors, b: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Single-chain convenience (the SaP-E reduced interface system, Sec. 2.1)
+# ---------------------------------------------------------------------------
+
+
+def btf_chain(
+    d: jax.Array, e: jax.Array, f: jax.Array, boost_eps: float = DEFAULT_BOOST
+) -> BTFactors:
+    """Factor a single block-tridiagonal chain (M, K, K).
+
+    Adds the partition axis around :func:`btf_ref` so the same recurrences
+    factor *one* chain; used recursively by the SaP-E exact reduced
+    interface system (``repro.core.spike``), whose (P-1) coupled interface
+    blocks of size 2K form exactly such a chain.  The returned factors keep
+    the leading singleton partition axis (pair with :func:`bts_chain`).
+    """
+    return btf_ref(d[None], e[None], f[None], boost_eps)
+
+
+def bts_chain(factors: BTFactors, b: jax.Array) -> jax.Array:
+    """Solve one factored chain: b (M, K, R) -> x (M, K, R)."""
+    return bts_ref(factors, b[None])[0]
+
+
+# ---------------------------------------------------------------------------
 # UL factorization via reversal (for the left-spike top blocks, Sec. 2.1)
 # ---------------------------------------------------------------------------
 

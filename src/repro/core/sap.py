@@ -48,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import reorder as reorder_mod
-from .banded import band_to_block_tridiag
+from .banded import band_to_block_tridiag, diag_dominance_factor
 from .block_lu import DEFAULT_BOOST
 from .krylov import KrylovResult, _bicgstab2_impl, _cg_impl
 from .operators import (
@@ -63,7 +63,11 @@ from .spike import SaPPreconditioner, build_preconditioner
 @dataclasses.dataclass
 class SaPOptions:
     p: int = 8  # number of partitions
-    variant: str = "C"  # "C" coupled | "D" decoupled
+    # "C" coupled (truncated SPIKE) | "D" decoupled | "E" exact reduced
+    # system | "auto" (C when the preconditioner band is diagonally
+    # dominant, d >= 1, else E -- paper Sec. 2.1.1 guidance).  Resolution
+    # happens at factor() time from the planned preconditioner band.
+    variant: str = "C"
     tol: float = 1e-10
     maxiter: int = 500
     boost_eps: float = DEFAULT_BOOST
@@ -92,13 +96,19 @@ class SaPSolution:
 class SaPSolveResult(NamedTuple):
     """Result of a lifecycle solve; a pytree of device arrays.
 
-    For ``solve_many``, ``x`` is (N, R) and the diagnostics are (R,).
+    For ``solve_many``, ``x`` is (N, R) and the per-RHS diagnostics
+    (``iterations`` / ``resnorm`` / ``converged``) are (R,).  ``d_factor``
+    is the degree of diagonal dominance of the preconditioner band
+    (paper Eq. 2.11, a scalar shared by all RHS) -- the quantity that
+    drives the ``variant="auto"`` policy; the resolved variant itself is
+    static metadata, available as ``factorization.variant``.
     """
 
     x: jax.Array
     iterations: jax.Array
     resnorm: jax.Array
     converged: jax.Array
+    d_factor: Optional[jax.Array] = None
 
 
 def _precond_dtype(opts: SaPOptions):
@@ -212,7 +222,7 @@ def plan(a, opts: Optional[SaPOptions] = None) -> SaPPlan:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("op", "pc", "b_perm", "x_perm"),
+    data_fields=("op", "pc", "b_perm", "x_perm", "d_factor"),
     meta_fields=("n", "k", "tol", "maxiter", "use_cg", "iter_dtype"),
 )
 @dataclasses.dataclass(eq=False)
@@ -222,6 +232,12 @@ class SaPFactorization:
     Holds the reordered operator, the factored preconditioner, and the
     permutations; ``solve`` / ``solve_many`` are pure JAX and jit-cached,
     so repeated right-hand sides pay only the Krylov iteration.
+
+    ``d_factor`` (degree of diagonal dominance of the preconditioner band,
+    paper Eq. 2.11) is carried as a device scalar -- a *data* field, so
+    factorizations of different matrices share one compiled solve -- and
+    echoed into every :class:`SaPSolveResult`.  The variant actually
+    factored (after ``"auto"`` resolution) is ``self.variant``.
     """
 
     op: LinearOperator
@@ -234,6 +250,7 @@ class SaPFactorization:
     maxiter: int
     use_cg: bool
     iter_dtype: Optional[str]
+    d_factor: Optional[jax.Array] = None  # scalar, Eq. 2.11 estimate
 
     @property
     def variant(self) -> str:
@@ -272,17 +289,31 @@ class SaPFactorization:
         return _solve_many(self, b)
 
 
+def resolve_variant(variant: str, d_factor: float) -> str:
+    """The ``"auto"`` policy: truncated SPIKE needs spike decay, which the
+    paper ties to diagonal dominance (Sec. 2.1.1) -- pick the cheap
+    truncated variant C for d >= 1, the exact reduced system E otherwise.
+    """
+    if variant != "auto":
+        return variant
+    return "C" if d_factor >= 1.0 else "E"
+
+
 def factor(pl: SaPPlan) -> SaPFactorization:
     """Factor the SaP preconditioner from a plan (T_LU .. T_SPIKE).
 
     Device-side and done once; the returned handle is reusable across any
     number of ``solve`` / ``solve_many`` calls and jit boundaries.
+    ``variant="auto"`` is resolved here from the planned preconditioner
+    band's degree of diagonal dominance (C for d >= 1, else E).
     """
     opts = pl.opts
+    d_factor = diag_dominance_factor(pl.band_pc)
+    variant = resolve_variant(opts.variant, float(d_factor))
     bt = band_to_block_tridiag(pl.band_pc, max(pl.k, 1), opts.p)
     pc = build_preconditioner(
         bt,
-        variant=opts.variant,
+        variant=variant,
         boost_eps=opts.boost_eps,
         precond_dtype=_precond_dtype(opts),
     )
@@ -298,6 +329,7 @@ def factor(pl: SaPPlan) -> SaPFactorization:
         maxiter=opts.maxiter,
         use_cg=opts.use_cg,
         iter_dtype=opts.iter_dtype,
+        d_factor=d_factor,
     )
 
 
@@ -333,6 +365,7 @@ def _solve_impl(fac: SaPFactorization, b: jax.Array) -> SaPSolveResult:
         iterations=res.iterations,
         resnorm=res.resnorm,
         converged=res.converged,
+        d_factor=fac.d_factor,
     )
 
 
@@ -341,7 +374,10 @@ _solve_one = jax.jit(_solve_impl)
 
 @jax.jit
 def _solve_many(fac: SaPFactorization, bmat: jax.Array) -> SaPSolveResult:
-    out_axes = SaPSolveResult(x=1, iterations=0, resnorm=0, converged=0)
+    # d_factor is shared by all RHS (closed over, unbatched): out_axes None
+    out_axes = SaPSolveResult(
+        x=1, iterations=0, resnorm=0, converged=0, d_factor=None
+    )
     return jax.vmap(lambda bi: _solve_impl(fac, bi), in_axes=1, out_axes=out_axes)(
         bmat
     )
@@ -371,7 +407,12 @@ def solve_banded(
         resnorm=float(res.resnorm),
         converged=bool(res.converged),
         k=fac.k,
-        info={"variant": fac.variant, "p": pl.opts.p},
+        info={
+            "variant": fac.variant,
+            "variant_requested": pl.opts.variant,
+            "d_factor": float(fac.d_factor),
+            "p": pl.opts.p,
+        },
     )
 
 
@@ -395,5 +436,11 @@ def solve_sparse(
         resnorm=float(res.resnorm),
         converged=bool(res.converged),
         k=fac.k,
-        info={**pl.info, "variant": fac.variant, "p": pl.opts.p},
+        info={
+            **pl.info,
+            "variant": fac.variant,
+            "variant_requested": pl.opts.variant,
+            "d_factor": float(fac.d_factor),
+            "p": pl.opts.p,
+        },
     )

@@ -10,10 +10,32 @@ Implements paper Sec. 2.1:
         xt_i^(b)             = g_i^(b) - V_i^(b) xt_{i+1}^(t)
   * the final decoupled solves (2.10).
 
-Two preconditioner variants (paper Sec. 2.1.1):
+Three preconditioner variants (paper Sec. 2.1.1):
   * SaP-D  ("decoupled"): z = D^{-1} r, one block solve.
   * SaP-C  ("coupled"):   block solve + truncated-spike correction +
                           second block solve.
+  * SaP-E  ("exact"):     block solve + *exact* reduced-system correction +
+                          second block solve.  The truncation in (2.9) rests
+                          on spike decay, which requires diagonal dominance
+                          (d >= 1, Eq. 2.11); SaP-E instead assembles the
+                          full (P-1)-interface reduced system from whole
+                          spikes -- a block-tridiagonal chain of (2K x 2K)
+                          blocks -- and factors it with the same btf/bts
+                          stack used for the partitions (recursively, so
+                          the Pallas kernel dispatch covers it too).  The
+                          apply is then an exact solve of the banded
+                          preconditioner matrix, robust for d < 1 at the
+                          cost of the extra O(P K^3) reduced factor.
+
+Reduced system (exact; unknowns y_i = [x_i^(b); x_{i+1}^(t)], i = 0..P-2):
+
+    [ I            V_i^(b) ]        [ W_i^(b) 0 ]        [ 0  0          ]
+    [ W_{i+1}^(t)  I       ] y_i  + [ 0       0 ] y_{i-1} + [ 0  V_{i+1}^(t) ] y_{i+1}
+        = [ g_i^(b); g_{i+1}^(t) ]
+
+where V_i = A_i^{-1}[0;..;B_i] and W_i = A_i^{-1}[C_i;0;..] are the whole
+spikes (their top/bottom K x K blocks appear above).  Truncating the
+off-diagonal terms recovers (2.9).
 """
 
 from __future__ import annotations
@@ -29,8 +51,10 @@ from .banded import BlockTridiag
 from .block_lu import (
     DEFAULT_BOOST,
     BTFactors,
+    btf_chain,
     btf_ref,
     btf_ul_ref,
+    bts_chain,
     bts_ref,
     gj_inverse,
 )
@@ -42,24 +66,25 @@ def _flip_rows(x: jax.Array) -> jax.Array:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("lu", "b_cpl", "c_cpl", "v_bot", "w_top", "rbar_inv"),
+    data_fields=("lu", "b_cpl", "c_cpl", "v_bot", "w_top", "rbar_inv", "red_lu"),
     meta_fields=("variant", "p", "m", "k", "impl"),
 )
 @dataclasses.dataclass
 class SaPPreconditioner:
-    """Factored SaP preconditioner (variant 'C' coupled or 'D' decoupled).
+    """Factored SaP preconditioner ('C' coupled, 'D' decoupled, 'E' exact).
 
     All factor arrays may be stored in a lower precision than the Krylov
     iteration (paper Sec. 3.1 "Mixed Precision Strategy").
     """
 
-    variant: str  # "C" | "D"
+    variant: str  # "C" | "D" | "E"
     lu: BTFactors  # factors of diag(A_1..A_P)
     b_cpl: jax.Array  # (P-1, K, K)
     c_cpl: jax.Array  # (P-1, K, K)
     v_bot: Optional[jax.Array]  # (P-1, K, K)  V_i^(b)
     w_top: Optional[jax.Array]  # (P-1, K, K)  W_{i+1}^(t)
     rbar_inv: Optional[jax.Array]  # (P-1, K, K)  inv(I - W V)
+    red_lu: Optional[BTFactors]  # factors of the exact (P-1, 2K) reduced chain
     p: int
     m: int
     k: int
@@ -71,8 +96,10 @@ class SaPPreconditioner:
         rb = r.astype(dtype).reshape(self.p, self.m, self.k, -1)
         if self.variant == "D":
             z = _bts(self.lu, rb, self.impl)
-            return z.reshape(r.shape).astype(r.dtype)
-        z = _apply_coupled(self, rb)
+        elif self.variant == "E":
+            z = _apply_exact(self, rb)
+        else:
+            z = _apply_coupled(self, rb)
         return z.reshape(r.shape).astype(r.dtype)
 
 
@@ -93,7 +120,23 @@ def _btf(d, e, f, boost_eps, impl):
     return kops.block_tridiag_factor(d, e, f, boost_eps, impl=impl)
 
 
-@partial(jax.jit, static_argnames=())
+def _btf_chain(d, e, f, boost_eps, impl):
+    """Factor one block-tridiag chain (M, K, K) through the same dispatch."""
+    if impl == "jnp":
+        return btf_chain(d, e, f, boost_eps)
+    from repro.kernels import ops as kops
+
+    return kops.block_tridiag_factor_chain(d, e, f, boost_eps, impl=impl)
+
+
+def _bts_chain(factors, b, impl):
+    if impl == "jnp":
+        return bts_chain(factors, b)
+    from repro.kernels import ops as kops
+
+    return kops.block_tridiag_solve_chain(factors, b, impl=impl)
+
+
 def _apply_coupled(pc: SaPPreconditioner, rb: jax.Array) -> jax.Array:
     # 1) g = D^{-1} r
     g = _bts(pc.lu, rb, pc.impl)  # (P, M, K, R)
@@ -114,6 +157,53 @@ def _apply_coupled(pc: SaPPreconditioner, rb: jax.Array) -> jax.Array:
     return _bts(pc.lu, rb2, pc.impl)
 
 
+def _apply_exact(pc: SaPPreconditioner, rb: jax.Array) -> jax.Array:
+    """SaP-E apply: an exact solve of the banded preconditioner matrix."""
+    # 1) g = D^{-1} r
+    g = _bts(pc.lu, rb, pc.impl)  # (P, M, K, R)
+
+    # 2) exact reduced system on the interface unknowns y_i = [x_i^(b);
+    #    x_{i+1}^(t)]; the RHS is just the interface slices of g (the spike
+    #    blocks live in the factored chain, not in the RHS).
+    h = jnp.concatenate([g[:-1, -1], g[1:, 0]], axis=1)  # (P-1, 2K, R)
+    y = _bts_chain(pc.red_lu, h, pc.impl)
+    xt_bot = y[:, : pc.k]  # x_i^(b),     i = 0..P-2
+    xt_top = y[:, pc.k :]  # x_{i+1}^(t), i = 0..P-2
+
+    # 3) final solves (eq. 2.10), now with exact interface values
+    rb2 = rb.at[1:, 0].add(-(pc.c_cpl @ xt_bot))
+    rb2 = rb2.at[:-1, -1].add(-(pc.b_cpl @ xt_top))
+    return _bts(pc.lu, rb2, pc.impl)
+
+
+def _reduced_interface_system(v_bot, v_top, w_top, w_bot):
+    """Assemble the exact (P-1)-interface block-tridiag chain (2K blocks).
+
+    Inputs are the four corner blocks of the whole spikes, each (P-1, K, K):
+    v_bot/v_top index right spikes of partitions 0..P-2, w_top/w_bot left
+    spikes of partitions 1..P-1.  Returns (d, e, f) of shape
+    (P-1, 2K, 2K); e[0] / f[P-2] are unused by the factorization.
+    """
+    dtype = v_bot.dtype
+    q, k, _ = v_bot.shape  # q = P-1 interfaces
+    eye = jnp.broadcast_to(jnp.eye(k, dtype=dtype), (q, k, k))
+    zero = jnp.zeros((q, k, k), dtype)
+
+    def blk2(tl, tr, bl, br):
+        top = jnp.concatenate([tl, tr], axis=-1)
+        bot = jnp.concatenate([bl, br], axis=-1)
+        return jnp.concatenate([top, bot], axis=-2)
+
+    # y_{i-1} contributes W_i^(b) x_{i-1}^(b); y_{i+1} contributes
+    # V_{i+1}^(t) x_{i+2}^(t) (see module docstring).
+    shift_dn = lambda x: jnp.concatenate([jnp.zeros_like(x[:1]), x[:-1]], 0)
+    shift_up = lambda x: jnp.concatenate([x[1:], jnp.zeros_like(x[:1])], 0)
+    rd = blk2(eye, v_bot, w_top, eye)
+    re = blk2(shift_dn(w_bot), zero, zero, zero)
+    rf = blk2(zero, zero, zero, shift_up(v_top))
+    return rd, re, rf
+
+
 def build_preconditioner(
     bt: BlockTridiag,
     variant: str = "C",
@@ -131,8 +221,10 @@ def build_preconditioner(
                   needed blocks.  This is the paper's third-stage-reordering
                   path (Sec. 2.2.1: per-partition reordering "renders the UL
                   factorization superfluous" and mandates whole spikes).
+      Variant "E" always uses whole spikes (it needs all four corner
+      blocks), so ``spike_mode`` is ignored there.
     """
-    if variant not in ("C", "D"):
+    if variant not in ("C", "D", "E"):
         raise ValueError(f"unknown SaP variant {variant!r}")
     if spike_mode not in ("ul", "full"):
         raise ValueError(f"unknown spike_mode {spike_mode!r}")
@@ -144,30 +236,38 @@ def build_preconditioner(
 
     lu = _btf(d, e, f, boost_eps, impl)
 
-    v_bot = w_top = rbar_inv = None
-    if variant == "C" and bt.p > 1:
-        if spike_mode == "ul":
+    v_bot = w_top = rbar_inv = red_lu = None
+    if variant in ("C", "E") and bt.p > 1:
+        if variant == "C" and spike_mode == "ul":
             # V_i^(b) = Sinv_i[M-1] @ B_i  for i = 0..P-2
             v_bot = lu.sinv[:-1, -1] @ b_cpl
             # W_{i+1}^(t) from the UL factorization of partitions 1..P-1
             ul = btf_ul_ref(d, e, f, boost_eps)
             w_top = _flip_rows(ul.sinv[1:, -1] @ _flip_rows(c_cpl))
         else:
-            # whole right spikes: A_i V_i = [0;..;B_i], keep bottom blocks
+            # whole right spikes: A_i V_i = [0;..;B_i], keep corner blocks
             rhs_b = jnp.zeros((bt.p, bt.m, bt.k, bt.k), precond_dtype)
             rhs_b = rhs_b.at[:-1, -1].set(b_cpl)
             v_full = _bts(lu, rhs_b, impl)
             v_bot = v_full[:-1, -1]
-            # whole left spikes: A_{i+1} W_{i+1} = [C_{i+1};0;..], keep tops
+            # whole left spikes: A_{i+1} W_{i+1} = [C_{i+1};0;..]
             rhs_c = jnp.zeros((bt.p, bt.m, bt.k, bt.k), precond_dtype)
             rhs_c = rhs_c.at[1:, 0].set(c_cpl)
             w_full = _bts(lu, rhs_c, impl)
             w_top = w_full[1:, 0]
-        eye = jnp.eye(bt.k, dtype=precond_dtype)
-        rbar = eye - w_top @ v_bot
-        rbar_inv = jax.vmap(lambda a: gj_inverse(a, boost_eps))(rbar)
-    elif variant == "C":
-        variant = "D"  # single partition: coupled == decoupled
+        if variant == "C":
+            eye = jnp.eye(bt.k, dtype=precond_dtype)
+            rbar = eye - w_top @ v_bot
+            rbar_inv = jax.vmap(lambda a: gj_inverse(a, boost_eps))(rbar)
+        else:
+            # exact reduced system: a (P-1)-long chain of 2K x 2K blocks,
+            # factored with the same block-tridiag stack (recursively).
+            rd, re, rf = _reduced_interface_system(
+                v_bot, v_full[:-1, 0], w_top, w_full[1:, -1]
+            )
+            red_lu = _btf_chain(rd, re, rf, boost_eps, impl)
+    elif variant in ("C", "E"):
+        variant = "D"  # single partition: coupled/exact == decoupled
 
     return SaPPreconditioner(
         variant=variant,
@@ -177,6 +277,7 @@ def build_preconditioner(
         v_bot=v_bot,
         w_top=w_top,
         rbar_inv=rbar_inv,
+        red_lu=red_lu,
         p=bt.p,
         m=bt.m,
         k=bt.k,

@@ -73,6 +73,29 @@ def block_tridiag_solve(
     )
 
 
+def block_tridiag_factor_chain(
+    d: jax.Array,
+    e: jax.Array,
+    f: jax.Array,
+    boost_eps: float = DEFAULT_BOOST,
+    impl: str | None = None,
+) -> BTFactors:
+    """Factor a single block-tridiagonal chain (M, K, K).
+
+    The recursive entry point for the SaP-E exact reduced interface system:
+    the (P-1) coupled 2Kx2K interface blocks form one chain, factored by
+    the same kernel as the partition factorization (grid (1, M)).
+    """
+    return block_tridiag_factor(d[None], e[None], f[None], boost_eps, impl=impl)
+
+
+def block_tridiag_solve_chain(
+    factors: BTFactors, b: jax.Array, impl: str | None = None
+) -> jax.Array:
+    """Solve one factored chain: b (M, K, R) -> x (M, K, R)."""
+    return block_tridiag_solve(factors, b[None], impl=impl)[0]
+
+
 # ---------------------------------------------------------------------------
 # Sequence-mixing recurrences (flattened over batch x heads)
 # ---------------------------------------------------------------------------

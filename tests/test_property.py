@@ -100,6 +100,44 @@ def test_chunked_scan_equals_sequential(t, chunk, dd, seed):
 
 
 @given(
+    k=st.sampled_from([2, 4, 8]),
+    m=st.integers(2, 6),
+    p=st.integers(1, 4),
+    dtype=st.sampled_from(["float32", "float64"]),
+    seed=st.integers(0, 10_000),
+)
+@settings(deadline=None, max_examples=10, print_blob=True)
+def test_btf_bts_interpret_matches_ref(k, m, p, dtype, seed):
+    """Kernel invariant: the Pallas btf/bts kernels in interpret mode agree
+    with the pure-jnp references for any (P, M, K) and storage dtype.
+
+    The kernels *compute* in f32 and store in the input dtype (mixed
+    precision, paper Sec. 3.1), so agreement is at f32 level even when the
+    storage dtype is float64 (and without the x64 flag float64 degrades to
+    float32 in both paths anyway).
+    """
+    rng = np.random.default_rng(seed)
+    dt = jnp.dtype(dtype)
+    d = jnp.asarray(rng.normal(size=(p, m, k, k)), dt) + 4 * jnp.eye(k, dtype=dt)
+    e = jnp.asarray(rng.normal(size=(p, m, k, k)) * 0.3, dt)
+    f = jnp.asarray(rng.normal(size=(p, m, k, k)) * 0.3, dt)
+    b = jnp.asarray(rng.normal(size=(p, m, k, 2)), dt)
+
+    fr = ops.block_tridiag_factor(d, e, f, impl="jnp")
+    fp = ops.block_tridiag_factor(d, e, f, impl="interpret")
+    tol = dict(rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fr.sinv, np.float64),
+                               np.asarray(fp.sinv, np.float64), **tol)
+    np.testing.assert_allclose(np.asarray(fr.l, np.float64),
+                               np.asarray(fp.l, np.float64), **tol)
+
+    xr = ops.block_tridiag_solve(fr, b, impl="jnp")
+    xp = ops.block_tridiag_solve(fr, b, impl="interpret")
+    np.testing.assert_allclose(np.asarray(xr, np.float64),
+                               np.asarray(xp, np.float64), **tol)
+
+
+@given(
     frac=st.floats(0.0, 0.3),
     seed=st.integers(0, 1000),
 )

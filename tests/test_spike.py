@@ -7,6 +7,7 @@ import pytest
 from repro.core.banded import (
     band_to_block_tridiag,
     block_tridiag_to_dense,
+    oscillatory_banded,
     random_banded,
 )
 from repro.core.spike import build_preconditioner
@@ -91,6 +92,51 @@ def test_coupled_beats_decoupled_consistency():
         z = np.asarray(pc.apply(jnp.asarray(r)))
         res[v] = np.linalg.norm(dense @ z - r)
     assert res["C"] < res["D"]
+
+
+@pytest.mark.parametrize("n,k,p,d", [(80, 4, 4, 0.5), (64, 4, 2, 0.5),
+                                     (96, 3, 5, 1.2)])
+def test_exact_variant_apply_is_exact_solve(n, k, p, d):
+    """SaP-E solves the banded preconditioner matrix *exactly* (to f32
+    roundoff), dominant or not -- unlike C, whose truncation needs d >= 1.
+    P=2 exercises the single-interface reduced chain (no e/f blocks)."""
+    band = jnp.asarray(random_banded(n, k, d=d, seed=0))
+    bt = band_to_block_tridiag(band, k, p)
+    dense = np.asarray(block_tridiag_to_dense(bt))
+    pc = build_preconditioner(bt, "E", precond_dtype=jnp.float32)
+    assert pc.variant == "E"
+    assert pc.red_lu is not None and pc.rbar_inv is None
+    # reduced chain: one pseudo-partition of (P-1) blocks of size 2K
+    assert pc.red_lu.sinv.shape == (1, p - 1, 2 * k, 2 * k)
+    r = np.random.default_rng(1).normal(size=bt.n_pad)
+    z = np.asarray(pc.apply(jnp.asarray(r, jnp.float32)))
+    res = np.linalg.norm(dense @ z - r) / np.linalg.norm(r)
+    assert res < 1e-5
+
+
+def test_exact_variant_robust_where_truncation_fails():
+    """Non-decaying spikes at d = 0.5: the truncated apply is O(1) wrong,
+    the exact reduced system stays at machine precision."""
+    band = jnp.asarray(oscillatory_banded(96, 4, d=0.5, seed=0))
+    bt = band_to_block_tridiag(band, 4, 4)
+    dense = np.asarray(block_tridiag_to_dense(bt))
+    r = np.random.default_rng(2).normal(size=bt.n_pad)
+    res = {}
+    for v in ("C", "E"):
+        pc = build_preconditioner(bt, v, precond_dtype=jnp.float32)
+        z = np.asarray(pc.apply(jnp.asarray(r, jnp.float32)))
+        res[v] = np.linalg.norm(dense @ z - r) / np.linalg.norm(r)
+    assert res["E"] < 1e-4  # f32 direct solve, cond-limited
+    assert res["C"] > 0.1  # truncation error is O(1) here
+    assert res["C"] > 100 * res["E"]
+
+
+def test_exact_single_partition_degrades_to_decoupled():
+    band = jnp.asarray(random_banded(32, 3, d=1.0, seed=5))
+    bt = band_to_block_tridiag(band, 3, 1)
+    pc = build_preconditioner(bt, "E")
+    assert pc.variant == "D"
+    assert pc.red_lu is None
 
 
 def test_full_spike_mode_matches_ul_mode():
