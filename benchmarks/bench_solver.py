@@ -86,6 +86,7 @@ def bench_d_sweep(report: Report):
                 us,
                 f"iters={sol.iterations:.2f};relerr={err:.1e};"
                 f"conv={sol.converged};variant={sol.info['variant']};"
+                f"red={sol.info['reduced_solver']};"
                 f"d_factor={sol.info['d_factor']:.3f}",
             )
 

@@ -20,12 +20,33 @@ class SolverConfig:
     name: str
     n: int
     k: int
-    variant: str = "C"  # coupled (truncated SPIKE); "D" = decoupled
+    # "C" truncated coupled | "D" decoupled | "E" exact reduced interface
+    # chain (distributed cyclic reduction) | "auto" (C at d >= 1 else E)
+    variant: str = "C"
+    # reduced-chain solver for single-device variant E: "chain" | "bcr" |
+    # "auto" (bcr once the chain is long enough); the distributed path
+    # always runs the log-depth PCR sweep.
+    reduced_solver: str = "auto"
     p_per_device: int = 1
     d: float = 1.0  # diagonal dominance of the generated test matrix
     tol: float = 1e-8
     maxiter: int = 200
     precond_dtype: str = "float32"  # bfloat16 on TPU = paper's mixed precision
+
+    def to_sap_options(self, p: int):
+        """Map this workload config onto single-device solver options (the
+        lifecycle API path; the distributed path takes the variant knob via
+        ``build_dist_sap`` and always sweeps the reduced chain with PCR)."""
+        from repro.core.sap import SaPOptions
+
+        return SaPOptions(
+            p=p,
+            variant=self.variant,
+            reduced_solver=self.reduced_solver,
+            tol=self.tol,
+            maxiter=self.maxiter,
+            precond_dtype=self.precond_dtype,
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,3 +69,10 @@ def full() -> SolverConfig:
 
 def reduced() -> SolverConfig:
     return SolverConfig(name="sap-solver-reduced", n=512, k=8, maxiter=50)
+
+
+def exact() -> SolverConfig:
+    """The non-dominant regime (d < 1) where truncation breaks down and
+    the exact reduced system -- solved in log-depth -- is required."""
+    return SolverConfig(name="sap-solver-exact", n=200_000, k=200,
+                        variant="E", d=0.5)

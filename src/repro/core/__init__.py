@@ -31,6 +31,15 @@ from .block_lu import (
     bts_ref,
     gj_inverse,
 )
+from .cyclic_reduction import (
+    BCRFactors,
+    PCRFactors,
+    bcr_factor,
+    bcr_solve,
+    pcr_factor,
+    pcr_solve,
+    resolve_reduced_solver,
+)
 from .krylov import KrylovResult, bicgstab2, bicgstab2_many, cg, cg_many
 from .operators import BandedOperator, CsrOperator, LinearOperator, as_operator
 from .sap import (
@@ -50,9 +59,11 @@ from .spike import SaPPreconditioner, build_preconditioner
 
 __all__ = [
     "BandedOperator",
+    "BCRFactors",
     "BlockTridiag",
     "BTFactors",
     "CsrOperator",
+    "PCRFactors",
     "KrylovResult",
     "LinearOperator",
     "SaPFactorization",
@@ -65,6 +76,8 @@ __all__ = [
     "band_matvec",
     "band_to_block_tridiag",
     "band_to_dense",
+    "bcr_factor",
+    "bcr_solve",
     "bicgstab2",
     "bicgstab2_many",
     "btf_ref",
@@ -82,10 +95,13 @@ __all__ = [
     "oscillatory_banded",
     "pad_banded",
     "padded_partition_size",
+    "pcr_factor",
+    "pcr_solve",
     "plan",
     "plan_banded",
     "random_banded",
     "random_rhs",
+    "resolve_reduced_solver",
     "resolve_variant",
     "solve_banded",
     "solve_sparse",

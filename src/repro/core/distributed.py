@@ -2,37 +2,51 @@
 
 The paper's P-way work splitting maps 1:1 onto the TPU mesh: every device
 owns ``p_per_device`` partitions; factorization and the two block solves
-of the preconditioner are embarrassingly parallel, and the *only*
-communication in the whole preconditioner is nearest-neighbor:
+of the preconditioner are embarrassingly parallel, and communication in
+the preconditioner is nearest-neighbor or log-depth:
 
-  setup:  one ppermute of the left-spike top blocks  W^(t)   (K x K each)
-  apply:  one ppermute of g^(t) (down) + one of xt^(b) (up)  (K x R each)
+  variant C (truncated, Sec. 2.1):
+    setup:  one ppermute of the left-spike top blocks  W^(t)   (K x K each)
+    apply:  one ppermute of g^(t) (down) + one of xt^(b) (up)  (K x R each)
+  variant E (exact reduced system, Sec. 2.1.1):
+    setup:  one ppermute aligning spike corners + ~log2(P) strided shift
+            rounds reducing the (P-1)-interface chain by parallel cyclic
+            reduction (``repro.core.cyclic_reduction.pcr_factor``)
+    apply:  ~log2(P) shift rounds of (2K x R) blocks -- the chain is
+            *never* gathered onto one device.
 
-i.e. O(K^2) / O(K R) bytes per device per apply, independent of N -- the
-TPU analogue of the paper's observation that the reduced system is tiny.
-The banded matvec for the outer Krylov iteration needs a K-row halo
-exchange (two ppermutes).  Everything else (dots, norms in BiCGStab) is
-left to pjit/GSPMD at the top level.
+i.e. O(K^2 log P) bytes per device per apply, independent of N -- the TPU
+analogue of the paper's observation that the reduced system is tiny, now
+extended to the exact coupling that stays robust below diagonal dominance
+d = 1.  The banded matvec for the outer Krylov iteration needs a K-row
+halo exchange (two ppermutes).  Everything else (dots, norms in BiCGStab)
+is left to pjit/GSPMD at the top level.
 
 Partitions are flattened over *all* mesh axes (tuple-axis collectives), so
 the same code runs on the (data, model) single-pod mesh and the
 (pod, data, model) multi-pod mesh -- partition boundaries crossing the pod
 axis prove the pod-level sharding in the dry-run.
+
+``variant="auto"`` applies the same C-vs-E policy as ``sap.factor()``:
+the degree of diagonal dominance (Eq. 2.11) is estimated from shard-local
+band rows and reduced over the mesh, picking C at d >= 1 and E below.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import axis_size, shard_map
-from .banded import pad_banded
+from .banded import diag_dominance_factor, pad_banded
 from .block_lu import DEFAULT_BOOST, btf_ref, btf_ul_ref, bts_ref, gj_inverse
+from .cyclic_reduction import pcr_factor, pcr_n_levels, pcr_solve
 from .krylov import bicgstab2
+from .sap import SaPSolveResult, resolve_variant
 
 
 def mesh_axes(mesh) -> Tuple[str, ...]:
@@ -62,6 +76,55 @@ def _shift_from_prev(x, axes):
     return jax.lax.ppermute(x, axes, perm)
 
 
+def _from_prev_by(x, dq, axes):
+    """Receive the block owned by the device ``dq`` positions before."""
+    if dq == 0:
+        return x
+    n = axis_size(axes)
+    perm = [(i, i + dq) for i in range(n - dq)]
+    return jax.lax.ppermute(x, axes, perm)
+
+
+def _from_next_by(x, dq, axes):
+    if dq == 0:
+        return x
+    n = axis_size(axes)
+    perm = [(i, i - dq) for i in range(dq, n)]
+    return jax.lax.ppermute(x, axes, perm)
+
+
+def _shift_dn_rows(x, s, axes):
+    """Row j of the global (flattened, p_loc rows/device) array receives
+    row j - s; rows shifted in past the start are zero.  One stride-s PCR
+    neighbor exchange: at most two ppermutes regardless of s."""
+    p_loc = x.shape[0]
+    q, r = divmod(s, p_loc)
+    a = _from_prev_by(x, q, axes)
+    if r == 0:
+        return a
+    b = _from_prev_by(x, q + 1, axes)
+    return jnp.concatenate([b[p_loc - r:], a[: p_loc - r]], axis=0)
+
+
+def _shift_up_rows(x, s, axes):
+    """Row j receives row j + s (zeros past the end)."""
+    p_loc = x.shape[0]
+    q, r = divmod(s, p_loc)
+    a = _from_next_by(x, q, axes)
+    if r == 0:
+        return a
+    b = _from_next_by(x, q + 1, axes)
+    return jnp.concatenate([a[r:], b[:r]], axis=0)
+
+
+def _flat_device_index(axes):
+    """Row-major flattened index of this device over the mesh axes."""
+    idx = jnp.int32(0)
+    for ax in axes:
+        idx = idx * axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
+
 # ---------------------------------------------------------------------------
 # Distributed preconditioner
 # ---------------------------------------------------------------------------
@@ -76,18 +139,18 @@ class DistSaP:
     m: int
     p_local: int
     n_pad: int
-    variant: str
+    variant: str  # resolved: "C" | "D" | "E"
+    variant_requested: str
     matvec: callable
     precond: callable
     factor: callable
     shard_band: callable
+    d_factor: Optional[float] = None  # Eq. 2.11 estimate ("auto" only)
 
 
-def _local_factor(d, e, f, b_next, c_prev, boost_eps, variant, axes):
+def _local_factor_c(d, e, f, b_next, c_prev, boost_eps, axes):
     """Runs per device.  d/e/f: (p_loc, M, K, K); couplings per partition."""
     lu = btf_ref(d, e, f, boost_eps)
-    if variant == "D":
-        return lu, None, None, None
     # right-spike bottoms (for interface owned by this partition)
     v_bot = lu.sinv[:, -1] @ b_next  # (p_loc, K, K)
     # left-spike tops of *this* partition (for the interface owned by prev)
@@ -103,11 +166,10 @@ def _local_factor(d, e, f, b_next, c_prev, boost_eps, variant, axes):
     return lu, v_bot, w_next, rbar_inv
 
 
-def _local_apply(lu, v_bot, w_next, rbar_inv, b_next, c_prev, rb, variant, axes):
-    """Per-device preconditioner apply.  rb: (p_loc, M, K, R)."""
+def _local_apply_c(state, b_next, c_prev, rb, axes):
+    """Per-device truncated-coupling apply.  rb: (p_loc, M, K, R)."""
+    lu, v_bot, w_next, rbar_inv = state
     g = bts_ref(lu, rb)
-    if variant == "D":
-        return g
     g_top, g_bot = g[:, 0], g[:, -1]  # (p_loc, K, R)
     # g^(t) of partition i+1 aligned at interface i
     g_top_next = jnp.concatenate(
@@ -118,6 +180,87 @@ def _local_apply(lu, v_bot, w_next, rbar_inv, b_next, c_prev, rb, variant, axes)
     xt_bot = g_bot - v_bot @ xt_top  # x~ for bottom of partition i
     # partition j needs: bottom corr B_j xt_top[j] (local); top corr
     # C_j xt_bot[j-1] (shift up)
+    xt_bot_prev = jnp.concatenate(
+        [_shift_from_prev(xt_bot[-1:], axes), xt_bot[:-1]], axis=0
+    )
+    rb2 = rb.at[:, -1].add(-(b_next @ xt_top))
+    rb2 = rb2.at[:, 0].add(-(c_prev @ xt_bot_prev))
+    return bts_ref(lu, rb2)
+
+
+def _local_factor_e(d, e, f, b_next, c_prev, boost_eps, axes, p_total):
+    """Sharded exact coupling: assemble this device's (2K x 2K) interface
+    blocks from whole-spike corners, then reduce the global chain by
+    parallel cyclic reduction -- log2(P) strided shift rounds, no gather.
+    """
+    lu = btf_ref(d, e, f, boost_eps)
+    p_loc, m, k, _ = d.shape
+    dtype = d.dtype
+
+    # whole spikes of the local partitions: A_j V_j = [0;..;B_j] (right),
+    # A_j W_j = [C_j;0;..] (left); keep the four corner blocks.
+    rhs_b = jnp.zeros((p_loc, m, k, k), dtype).at[:, -1].set(b_next)
+    v = bts_ref(lu, rhs_b)
+    rv_top, rv_bot = v[:, 0], v[:, -1]
+    rhs_c = jnp.zeros((p_loc, m, k, k), dtype).at[:, 0].set(c_prev)
+    w = bts_ref(lu, rhs_c)
+    lw_top, lw_bot = w[:, 0], w[:, -1]
+
+    # interface i lives with partition i and couples y_i = [x_i^b;
+    # x_{i+1}^t]: it needs W_{i+1}^t / V_{i+1}^t from partition i+1.
+    nxt = lambda x: jnp.concatenate(
+        [x[1:], _shift_from_next(x[:1], axes)], axis=0
+    )
+    lw_top_next = nxt(lw_top)
+    rv_top_next = nxt(rv_top)
+
+    eye = jnp.broadcast_to(jnp.eye(k, dtype=dtype), (p_loc, k, k))
+    zero = jnp.zeros((p_loc, k, k), dtype)
+
+    def blk2(tl, tr, bl, br):
+        top = jnp.concatenate([tl, tr], axis=-1)
+        bot = jnp.concatenate([bl, br], axis=-1)
+        return jnp.concatenate([top, bot], axis=-2)
+
+    rd = blk2(eye, rv_bot, lw_top_next, eye)
+    re = blk2(lw_bot, zero, zero, zero)  # couples to y_{i-1} via W_i^(b)
+    rf = blk2(zero, zero, zero, rv_top_next)  # to y_{i+1} via V_{i+1}^(t)
+
+    # The flattened chain has one slot per partition; the last partition's
+    # slot is not a real interface -- pad it to a decoupled identity block.
+    gidx = _flat_device_index(axes) * p_loc + jnp.arange(p_loc)
+    is_pad = (gidx >= p_total - 1)[:, None, None]
+    eye2 = jnp.broadcast_to(jnp.eye(2 * k, dtype=dtype), rd.shape)
+    rd = jnp.where(is_pad, eye2, rd)
+    re = jnp.where(is_pad, 0.0, re)
+    rf = jnp.where(is_pad, 0.0, rf)
+
+    shift_dn = lambda x, s: _shift_dn_rows(x, s, axes)
+    shift_up = lambda x, s: _shift_up_rows(x, s, axes)
+    pcr = pcr_factor(
+        rd, re, rf, pcr_n_levels(p_total - 1),
+        shift_dn=shift_dn, shift_up=shift_up, boost_eps=boost_eps,
+    )
+    return lu, pcr
+
+
+def _local_apply_e(state, b_next, c_prev, rb, axes):
+    """Exact-coupling apply: block solve + log-depth reduced sweep +
+    corrected block solve (the sharded counterpart of spike._apply_exact)."""
+    lu, pcr = state
+    k = rb.shape[2]
+    g = bts_ref(lu, rb)
+    g_top, g_bot = g[:, 0], g[:, -1]  # (p_loc, K, R)
+    g_top_next = jnp.concatenate(
+        [g_top[1:], _shift_from_next(g_top[:1], axes)], axis=0
+    )
+    h = jnp.concatenate([g_bot, g_top_next], axis=1)  # (p_loc, 2K, R)
+    y = pcr_solve(
+        pcr, h,
+        shift_dn=lambda x, s: _shift_dn_rows(x, s, axes),
+        shift_up=lambda x, s: _shift_up_rows(x, s, axes),
+    )
+    xt_bot, xt_top = y[:, :k], y[:, k:]  # x_i^(b), x_{i+1}^(t)
     xt_bot_prev = jnp.concatenate(
         [_shift_from_prev(xt_bot[-1:], axes), xt_bot[:-1]], axis=0
     )
@@ -138,6 +281,34 @@ def _local_matvec(band_loc, x_loc, k, axes):
 
 
 # ---------------------------------------------------------------------------
+# Sharded dominance estimate (drives variant="auto")
+# ---------------------------------------------------------------------------
+
+
+def dist_diag_dominance_factor(mesh, band_p: jax.Array) -> jax.Array:
+    """Degree of diagonal dominance (Eq. 2.11) from shard-local band rows.
+
+    Each device reduces its own rows with :func:`diag_dominance_factor`
+    (identity padding rows drop out as infinitely dominant) and the
+    per-shard minima are combined with one ``pmin`` over the mesh axes --
+    no row ever leaves its device.
+    """
+    axes = mesh_axes(mesh)
+
+    def local_d(rows):
+        return jax.lax.pmin(diag_dominance_factor(rows), axes)
+
+    fn = shard_map(
+        local_d,
+        mesh=mesh,
+        in_specs=(P(axes, None),),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(band_p)
+
+
+# ---------------------------------------------------------------------------
 # Builder
 # ---------------------------------------------------------------------------
 
@@ -150,18 +321,43 @@ def build_dist_sap(
     p_per_device: int = 1,
     boost_eps: float = DEFAULT_BOOST,
     precond_dtype=jnp.float32,
+    band=None,
 ):
     """Construct the shard_mapped matvec/precond/factor closures.
 
     Returns a :class:`DistSaP`; all functions operate on globally-sharded
     arrays and can be jit/lowered on the production mesh.
+
+    ``variant`` is one of "C" (truncated coupling), "D" (decoupled), "E"
+    (exact reduced interface chain via distributed cyclic reduction) or
+    "auto" -- the same policy as ``sap.factor()``: C when the band is
+    diagonally dominant (d >= 1, Eq. 2.11), E below.  "auto" needs the
+    band rows to estimate d, so pass ``band`` (host (N, 2K+1) storage);
+    the estimate itself runs sharded (:func:`dist_diag_dominance_factor`).
     """
+    if variant not in ("C", "D", "E", "auto"):
+        raise ValueError(f"unknown distributed SaP variant {variant!r}")
     axes = mesh_axes(mesh)
     ndev = n_devices(mesh)
     p_total = ndev * p_per_device
     ni = -(-n // p_total)  # ceil rows per partition
     m = max(2, -(-ni // k))  # blocks per partition (>= 2 so top != bottom)
     n_pad = p_total * m * k
+
+    variant_requested = variant
+    d_factor = None
+    if variant == "auto":
+        if band is None:
+            raise ValueError(
+                'variant="auto" needs the band rows to estimate diagonal '
+                "dominance; pass band=(N, 2K+1) storage to build_dist_sap"
+            )
+        band_p, _ = pad_banded(
+            jnp.asarray(band), jnp.zeros((n,), jnp.asarray(band).dtype), n_pad
+        )
+        with mesh:
+            d_factor = float(dist_diag_dominance_factor(mesh, band_p))
+        variant = resolve_variant("auto", d_factor)
 
     part_spec = P(axes)  # flattened over all axes
 
@@ -188,35 +384,41 @@ def build_dist_sap(
         return band_p, b_p, parts
 
     # ---- shard_mapped closures ---------------------------------------------
+    # Every variant's factor returns an opaque per-device state pytree and
+    # apply consumes it, so the shard_map plumbing is variant-independent.
     if variant == "C":
         def fac_local(d, e, f, b_next, c_prev):
-            return _local_factor(d, e, f, b_next, c_prev, boost_eps, "C", axes)
+            return _local_factor_c(d, e, f, b_next, c_prev, boost_eps, axes)
 
-        def apply_local(lu, v_bot, w_next, rbar_inv, b_next, c_prev, rb):
-            return _local_apply(
-                lu, v_bot, w_next, rbar_inv, b_next, c_prev, rb, "C", axes
+        def apply_local(state, b_next, c_prev, rb):
+            return _local_apply_c(state, b_next, c_prev, rb, axes)
+    elif variant == "E":
+        def fac_local(d, e, f, b_next, c_prev):
+            return _local_factor_e(
+                d, e, f, b_next, c_prev, boost_eps, axes, p_total
             )
+
+        def apply_local(state, b_next, c_prev, rb):
+            return _local_apply_e(state, b_next, c_prev, rb, axes)
     else:
         def fac_local(d, e, f, b_next, c_prev):
-            lu = btf_ref(d, e, f, boost_eps)
-            zero = jnp.zeros_like(d[:, 0])
-            return lu, zero, zero, zero
+            return (btf_ref(d, e, f, boost_eps),)
 
-        def apply_local(lu, v_bot, w_next, rbar_inv, b_next, c_prev, rb):
-            return bts_ref(lu, rb)
+        def apply_local(state, b_next, c_prev, rb):
+            return bts_ref(state[0], rb)
 
     fac_fn = shard_map(
         fac_local,
         mesh=mesh,
         in_specs=(part_spec,) * 5,
-        out_specs=(part_spec, part_spec, part_spec, part_spec),
+        out_specs=part_spec,
         check_vma=False,
     )
 
     apply_fn = shard_map(
         apply_local,
         mesh=mesh,
-        in_specs=(part_spec,) * 7,
+        in_specs=(part_spec,) * 4,
         out_specs=part_spec,
         check_vma=False,
     )
@@ -236,10 +438,12 @@ def build_dist_sap(
         p_local=p_per_device,
         n_pad=n_pad,
         variant=variant,
+        variant_requested=variant_requested,
         matvec=mv_fn,
         precond=apply_fn,
         factor=fac_fn,
         shard_band=shard_band,
+        d_factor=d_factor,
     )
 
 
@@ -247,24 +451,33 @@ def solve_step_fn(dsap: DistSaP, tol: float = 1e-8, maxiter: int = 200):
     """Whole-solve function suitable for jit/lower on the production mesh.
 
     Inputs: band (N_pad, 2K+1) row-sharded, b (N_pad,) sharded, plus the
-    block-tridiag partition arrays.  Output: x, iterations, resnorm.
+    block-tridiag partition arrays.  Returns a :class:`~repro.core.sap.
+    SaPSolveResult` -- solution plus the convergence diagnostics
+    (iterations / resnorm / converged, and the sharded d-estimate when
+    the variant was resolved by "auto").
     """
     k, m = dsap.k, dsap.m
-    variant = dsap.variant
+    d_factor = dsap.d_factor
 
     def step(band, b, d, e, f, b_next, c_prev):
-        lu, v_bot, w_next, rbar_inv = dsap.factor(d, e, f, b_next, c_prev)
+        state = dsap.factor(d, e, f, b_next, c_prev)
         p_total = d.shape[0]
 
         def precond(r):
             rb = r.reshape(p_total, m, k, 1).astype(d.dtype)
-            z = dsap.precond(lu, v_bot, w_next, rbar_inv, b_next, c_prev, rb)
+            z = dsap.precond(state, b_next, c_prev, rb)
             return z.reshape(r.shape).astype(r.dtype)
 
         def matvec(x):
             return dsap.matvec(band, x)
 
         res = bicgstab2(matvec, b, precond=precond, tol=tol, maxiter=maxiter)
-        return res.x, res.iterations, res.resnorm
+        return SaPSolveResult(
+            x=res.x,
+            iterations=res.iterations,
+            resnorm=res.resnorm,
+            converged=res.converged,
+            d_factor=None if d_factor is None else jnp.asarray(d_factor),
+        )
 
     return step

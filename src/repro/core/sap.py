@@ -74,6 +74,10 @@ class SaPOptions:
     precond_dtype: str = "float32"
     iter_dtype: Optional[str] = None  # Krylov dtype; None = follow the RHS
     use_cg: bool = False  # CG for SPD systems
+    # reduced-system solver for variant "E": "chain" = sequential btf/bts
+    # sweep over the (P-1)-interface chain, "bcr" = log-depth block cyclic
+    # reduction, "auto" = bcr once the chain is long enough to amortize it.
+    reduced_solver: str = "auto"
     # sparse front-end (Sec. 2.2)
     use_db: bool = True  # diagonal-boosting reordering
     use_cm: bool = True  # bandwidth-reducing reordering
@@ -316,6 +320,7 @@ def factor(pl: SaPPlan) -> SaPFactorization:
         variant=variant,
         boost_eps=opts.boost_eps,
         precond_dtype=_precond_dtype(opts),
+        reduced_solver=opts.reduced_solver,
     )
     to_idx = lambda p: None if p is None else jnp.asarray(p, jnp.int32)
     return SaPFactorization(
@@ -410,6 +415,7 @@ def solve_banded(
         info={
             "variant": fac.variant,
             "variant_requested": pl.opts.variant,
+            "reduced_solver": fac.pc.reduced_solver,
             "d_factor": float(fac.d_factor),
             "p": pl.opts.p,
         },
@@ -440,6 +446,7 @@ def solve_sparse(
             **pl.info,
             "variant": fac.variant,
             "variant_requested": pl.opts.variant,
+            "reduced_solver": fac.pc.reduced_solver,
             "d_factor": float(fac.d_factor),
             "p": pl.opts.p,
         },

@@ -58,6 +58,12 @@ from .block_lu import (
     bts_ref,
     gj_inverse,
 )
+from .cyclic_reduction import (
+    BCRFactors,
+    bcr_factor,
+    bcr_solve,
+    resolve_reduced_solver,
+)
 
 
 def _flip_rows(x: jax.Array) -> jax.Array:
@@ -66,8 +72,11 @@ def _flip_rows(x: jax.Array) -> jax.Array:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("lu", "b_cpl", "c_cpl", "v_bot", "w_top", "rbar_inv", "red_lu"),
-    meta_fields=("variant", "p", "m", "k", "impl"),
+    data_fields=(
+        "lu", "b_cpl", "c_cpl", "v_bot", "w_top", "rbar_inv", "red_lu",
+        "red_bcr",
+    ),
+    meta_fields=("variant", "p", "m", "k", "impl", "reduced_solver"),
 )
 @dataclasses.dataclass
 class SaPPreconditioner:
@@ -85,10 +94,14 @@ class SaPPreconditioner:
     w_top: Optional[jax.Array]  # (P-1, K, K)  W_{i+1}^(t)
     rbar_inv: Optional[jax.Array]  # (P-1, K, K)  inv(I - W V)
     red_lu: Optional[BTFactors]  # factors of the exact (P-1, 2K) reduced chain
+    red_bcr: Optional[BCRFactors]  # log-depth BCR factors of the same chain
     p: int
     m: int
     k: int
     impl: str = "jnp"  # kernel dispatch: "jnp" | "interpret" | "pallas"
+    # resolved reduced-chain solver for variant E: "chain" (sequential
+    # btf/bts sweep) or "bcr" (log-depth cyclic reduction); "none" otherwise
+    reduced_solver: str = "none"
 
     def apply(self, r: jax.Array) -> jax.Array:
         """Apply M^{-1} to a (padded) flat residual of length P*M*K."""
@@ -137,6 +150,23 @@ def _bts_chain(factors, b, impl):
     return kops.block_tridiag_solve_chain(factors, b, impl=impl)
 
 
+def _bcr_factor(d, e, f, boost_eps, impl):
+    """Log-depth chain factor through the same dispatch (ref/interpret/pallas)."""
+    if impl == "jnp":
+        return bcr_factor(d, e, f, boost_eps)
+    from repro.kernels import ops as kops
+
+    return kops.bcr_factor(d, e, f, boost_eps, impl=impl)
+
+
+def _bcr_solve(factors, b, impl):
+    if impl == "jnp":
+        return bcr_solve(factors, b)
+    from repro.kernels import ops as kops
+
+    return kops.bcr_solve(factors, b, impl=impl)
+
+
 def _apply_coupled(pc: SaPPreconditioner, rb: jax.Array) -> jax.Array:
     # 1) g = D^{-1} r
     g = _bts(pc.lu, rb, pc.impl)  # (P, M, K, R)
@@ -166,7 +196,10 @@ def _apply_exact(pc: SaPPreconditioner, rb: jax.Array) -> jax.Array:
     #    x_{i+1}^(t)]; the RHS is just the interface slices of g (the spike
     #    blocks live in the factored chain, not in the RHS).
     h = jnp.concatenate([g[:-1, -1], g[1:, 0]], axis=1)  # (P-1, 2K, R)
-    y = _bts_chain(pc.red_lu, h, pc.impl)
+    if pc.reduced_solver == "bcr":
+        y = _bcr_solve(pc.red_bcr, h, pc.impl)
+    else:
+        y = _bts_chain(pc.red_lu, h, pc.impl)
     xt_bot = y[:, : pc.k]  # x_i^(b),     i = 0..P-2
     xt_top = y[:, pc.k :]  # x_{i+1}^(t), i = 0..P-2
 
@@ -211,6 +244,7 @@ def build_preconditioner(
     precond_dtype=jnp.float32,
     impl: str = "jnp",
     spike_mode: str = "ul",
+    reduced_solver: str = "auto",
 ) -> SaPPreconditioner:
     """Factor the SaP preconditioner from block-tridiagonal partitions.
 
@@ -223,11 +257,25 @@ def build_preconditioner(
                   factorization superfluous" and mandates whole spikes).
       Variant "E" always uses whole spikes (it needs all four corner
       blocks), so ``spike_mode`` is ignored there.
+
+    reduced_solver (variant "E" only; carried on the returned pytree and
+    echoed into ``SaPSolution.info``):
+      * "chain" -- sequential btf/bts sweep over the (P-1)-interface chain
+                   (O(P) dependent steps).
+      * "bcr"   -- block cyclic reduction: O(log2 P) parallel levels
+                   (``repro.core.cyclic_reduction``), same kernel dispatch.
+      * "auto"  -- "bcr" once the chain is long enough to amortize the
+                   log-depth machinery, else "chain".
     """
     if variant not in ("C", "D", "E"):
         raise ValueError(f"unknown SaP variant {variant!r}")
     if spike_mode not in ("ul", "full"):
         raise ValueError(f"unknown spike_mode {spike_mode!r}")
+    reduced_solver = (
+        resolve_reduced_solver(reduced_solver, bt.p - 1)
+        if variant == "E" and bt.p > 1
+        else "none"
+    )
     d = bt.d.astype(precond_dtype)
     e = bt.e.astype(precond_dtype)
     f = bt.f.astype(precond_dtype)
@@ -236,7 +284,7 @@ def build_preconditioner(
 
     lu = _btf(d, e, f, boost_eps, impl)
 
-    v_bot = w_top = rbar_inv = red_lu = None
+    v_bot = w_top = rbar_inv = red_lu = red_bcr = None
     if variant in ("C", "E") and bt.p > 1:
         if variant == "C" and spike_mode == "ul":
             # V_i^(b) = Sinv_i[M-1] @ B_i  for i = 0..P-2
@@ -261,11 +309,16 @@ def build_preconditioner(
             rbar_inv = jax.vmap(lambda a: gj_inverse(a, boost_eps))(rbar)
         else:
             # exact reduced system: a (P-1)-long chain of 2K x 2K blocks,
-            # factored with the same block-tridiag stack (recursively).
+            # factored either with the same block-tridiag stack
+            # (recursively, O(P) sequential sweep) or by block cyclic
+            # reduction (O(log2 P) parallel levels).
             rd, re, rf = _reduced_interface_system(
                 v_bot, v_full[:-1, 0], w_top, w_full[1:, -1]
             )
-            red_lu = _btf_chain(rd, re, rf, boost_eps, impl)
+            if reduced_solver == "bcr":
+                red_bcr = _bcr_factor(rd, re, rf, boost_eps, impl)
+            else:
+                red_lu = _btf_chain(rd, re, rf, boost_eps, impl)
     elif variant in ("C", "E"):
         variant = "D"  # single partition: coupled/exact == decoupled
 
@@ -278,8 +331,10 @@ def build_preconditioner(
         w_top=w_top,
         rbar_inv=rbar_inv,
         red_lu=red_lu,
+        red_bcr=red_bcr,
         p=bt.p,
         m=bt.m,
         k=bt.k,
         impl=impl,
+        reduced_solver=reduced_solver,
     )

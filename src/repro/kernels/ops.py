@@ -19,8 +19,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.block_lu import DEFAULT_BOOST, BTFactors
+from repro.core.cyclic_reduction import BCRFactors
 
 from . import ref
+from .bcr import bcr_factor_pallas, bcr_solve_pallas
 from .btf import btf_pallas
 from .bts import bts_pallas
 from .ssd_chunk import ssd_pallas
@@ -94,6 +96,44 @@ def block_tridiag_solve_chain(
 ) -> jax.Array:
     """Solve one factored chain: b (M, K, R) -> x (M, K, R)."""
     return block_tridiag_solve(factors, b[None], impl=impl)[0]
+
+
+# ---------------------------------------------------------------------------
+# Block cyclic reduction (log-depth chain factor / solve)
+# ---------------------------------------------------------------------------
+
+
+def bcr_factor(
+    d: jax.Array,
+    e: jax.Array,
+    f: jax.Array,
+    boost_eps: float = DEFAULT_BOOST,
+    impl: str | None = None,
+) -> BCRFactors:
+    """Factor a chain (M, K, K) by even/odd elimination in log2(M) levels.
+
+    Log-depth alternative to :func:`block_tridiag_factor_chain` for the
+    SaP-E reduced interface system; both impls build the identical
+    :class:`~repro.core.cyclic_reduction.BCRFactors` pytree.
+    """
+    impl = impl or default_impl()
+    if impl == "jnp":
+        from repro.core import cyclic_reduction as cr
+
+        return cr.bcr_factor(d, e, f, boost_eps)
+    return bcr_factor_pallas(d, e, f, boost_eps, interpret=_interpret(impl))
+
+
+def bcr_solve(
+    factors: BCRFactors, b: jax.Array, impl: str | None = None
+) -> jax.Array:
+    """Solve one BCR-factored chain: b (M, K, R) -> x (M, K, R)."""
+    impl = impl or default_impl()
+    if impl == "jnp":
+        from repro.core import cyclic_reduction as cr
+
+        return cr.bcr_solve(factors, b)
+    return bcr_solve_pallas(factors, b, interpret=_interpret(impl))
 
 
 # ---------------------------------------------------------------------------

@@ -19,7 +19,8 @@ Usage:
   python -m repro.launch.dryrun --arch sap-solver --shape dense_200k --multi-pod
   python -m repro.launch.dryrun --list
 Options: --multi-pod, --out out.json, --zero1, --remat {none,full,dots},
-         --save-hlo hlo.txt, --variant {C,D} (solver).
+         --save-hlo hlo.txt, --variant {C,D,E} (solver; E = exact reduced
+         chain via distributed cyclic reduction).
 """
 
 import argparse
@@ -343,7 +344,7 @@ def main():
     ap.add_argument("--out", default=None)
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--remat", default=None, choices=[None, "none", "full", "dots"])
-    ap.add_argument("--variant", default="C", choices=["C", "D"])
+    ap.add_argument("--variant", default="C", choices=["C", "D", "E"])
     ap.add_argument("--p-per-device", type=int, default=1)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ssm-chunk", type=int, default=None)

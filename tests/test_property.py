@@ -138,6 +138,45 @@ def test_btf_bts_interpret_matches_ref(k, m, p, dtype, seed):
 
 
 @given(
+    m=st.sampled_from([1, 2, 3, 5, 8, 16]),
+    k=st.sampled_from([2, 4, 8]),
+    dtype=st.sampled_from(["float32", "float64"]),
+    seed=st.integers(0, 10_000),
+)
+@settings(deadline=None, max_examples=10, print_blob=True)
+def test_bcr_solve_matches_bts_chain(m, k, dtype, seed):
+    """Chain invariant: log-depth cyclic reduction solves any random
+    block-tridiagonal chain to the same answer as the sequential
+    btf_chain/bts_chain sweep -- including non-power-of-two lengths.
+
+    Like the btf/bts kernels, the factors compute at f32 accuracy (and
+    float64 degrades to float32 without the x64 flag anyway), so the
+    agreement tolerance is f32-level for both storage dtypes.
+    """
+    from repro.core.block_lu import btf_chain, bts_chain
+    from repro.core.cyclic_reduction import bcr_factor, bcr_solve
+
+    rng = np.random.default_rng(seed)
+    dt = jnp.dtype(dtype)
+    d = jnp.asarray(rng.normal(size=(m, k, k)), dt) + 4 * jnp.eye(k, dtype=dt)
+    e = jnp.asarray(rng.normal(size=(m, k, k)) * 0.3, dt)
+    f = jnp.asarray(rng.normal(size=(m, k, k)) * 0.3, dt)
+    b = jnp.asarray(rng.normal(size=(m, k, 2)), dt)
+    x_seq = bts_chain(btf_chain(d, e, f), b)
+    x_bcr = bcr_solve(bcr_factor(d, e, f), b)
+    np.testing.assert_allclose(
+        np.asarray(x_bcr, np.float64), np.asarray(x_seq, np.float64),
+        rtol=5e-4, atol=5e-4,
+    )
+    x_int = ops.bcr_solve(ops.bcr_factor(d, e, f, impl="interpret"), b,
+                          impl="interpret")
+    np.testing.assert_allclose(
+        np.asarray(x_int, np.float64), np.asarray(x_seq, np.float64),
+        rtol=5e-4, atol=5e-4,
+    )
+
+
+@given(
     frac=st.floats(0.0, 0.3),
     seed=st.integers(0, 1000),
 )
