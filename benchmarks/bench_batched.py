@@ -1,0 +1,145 @@
+"""Batched fleet-solve benchmarks: vmapped many-system throughput.
+
+Measures the new batched subsystem (``repro.core.batched`` +
+``repro.serve.solver_engine``) against the naive python loop the paper's
+target workload would otherwise run -- one plan/factor/solve round trip
+per system -- across batch sizes {1, 8, 32, 128}:
+
+  * ``fleet/loop_S``    -- python loop: per-system ``factor(plan_banded)``
+                           + ``solve`` (the expensive stages re-run S times)
+  * ``fleet/batched_S`` -- one ``batch_factor`` (vmapped device stages) +
+                           one ``solve_batch`` over the stacked fleet
+  * ``engine/*``        -- the serving path: bucketed heterogeneous fleet
+                           with repeated matrices through ``SolverEngine``
+                           (cache-hit rate + systems/s)
+
+Run standalone (``python -m benchmarks.bench_batched [--smoke] [--out D]``)
+to emit the machine-readable ``BENCH_batched.json`` trajectory file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    SaPOptions,
+    batch_factor,
+    batch_plan,
+    factor,
+    plan_banded,
+)
+from repro.core.banded import band_matvec, random_banded  # noqa: E402
+from repro.serve import SolverEngine  # noqa: E402
+
+from benchmarks.common import Report, timeit  # noqa: E402
+
+
+def _fleet(s, n, k, d=1.0, seed=0):
+    """S independent banded systems (same shape; distinct entries) + RHS."""
+    bands, bs, xs = [], [], []
+    rng = np.random.default_rng(seed)
+    for i in range(s):
+        band = jnp.asarray(random_banded(n, k, d=d, seed=seed + i), jnp.float32)
+        x = rng.normal(size=n)
+        bands.append(band)
+        xs.append(x)
+        bs.append(band_matvec(band, jnp.asarray(x, jnp.float32)))
+    return bands, jnp.stack(bs), np.stack(xs)
+
+
+def bench_fleet(report: Report, smoke: bool = False):
+    """Batched solve_batch vs the python loop of per-system factor+solve."""
+    n, k, p = (512, 8, 4) if smoke else (2048, 8, 8)
+    batches = (1, 8) if smoke else (1, 8, 32, 128)
+    opts = SaPOptions(p=p, variant="C", tol=1e-6, maxiter=200)
+    for s in batches:
+        jax.clear_caches()
+        bands, bmat, xs = _fleet(s, n, k)
+
+        def loop_all():
+            out = []
+            for i in range(s):
+                fac = factor(plan_banded(bands[i], opts))
+                out.append(fac.solve(bmat[i]).x)
+            return out
+
+        us_loop = timeit(loop_all, warmup=1, iters=1)
+
+        def batched_all():
+            bfac = batch_factor(batch_plan(bands, opts))
+            return bfac.solve_batch(bmat).x
+
+        us_batched = timeit(batched_all, warmup=1, iters=3)
+
+        bfac = batch_factor(batch_plan(bands, opts))
+        res = bfac.solve_batch(bmat)
+        err = float(np.abs(np.asarray(res.x)[:, :n] - xs).max())
+        report.add(f"fleet/loop_S={s}", us_loop, "replan+refactor per system")
+        report.add(
+            f"fleet/batched_S={s}",
+            us_batched,
+            f"speedup={us_loop / us_batched:.1f}x;"
+            f"per_system_us={us_batched / s:.1f};maxerr={err:.1e};"
+            f"conv={bool(np.asarray(res.converged).all())}",
+        )
+
+
+def bench_engine(report: Report, smoke: bool = False):
+    """Serving path: heterogeneous fleet, repeated matrices, LRU cache."""
+    n0, k0, steps, distinct = (256, 4, 3, 2) if smoke else (1024, 8, 8, 4)
+    opts = SaPOptions(p=4, variant="C", tol=1e-6, maxiter=200)
+    eng = SolverEngine(opts, max_batch=32, cache_size=64)
+    rng = np.random.default_rng(3)
+    mats = [
+        np.float32(random_banded(n0 + 37 * i, k0 + (i % 2), d=1.1, seed=i))
+        for i in range(distinct)
+    ]
+    t0 = time.perf_counter()
+    for _ in range(steps):  # time-stepping: same matrices, fresh RHS
+        for band in mats:
+            b = rng.normal(size=band.shape[0]).astype(np.float32)
+            eng.submit_system(band, b)
+    done = eng.run_until_drained()
+    wall = time.perf_counter() - t0
+    conv = all(r.result.converged for r in done)
+    report.add(
+        "engine/fleet",
+        wall * 1e6 / max(len(done), 1),
+        f"solved={len(done)};hit_rate={eng.cache_hit_rate:.2f};"
+        f"factored={eng.stats['factored_systems']};"
+        f"steps={eng.stats['steps']};sys_per_s={len(done) / wall:.1f};"
+        f"conv={conv}",
+    )
+
+
+def run(report: Report, smoke: bool = False):
+    bench_fleet(report, smoke)
+    bench_engine(report, smoke)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / small batches (CI smoke job)")
+    ap.add_argument("--out", default=".",
+                    help="directory for BENCH_batched.json")
+    args = ap.parse_args(argv)
+    report = Report("batched")
+    print("name,us_per_call,derived", flush=True)
+    run(report, smoke=args.smoke)
+    report.write_json(
+        Path(args.out) / "BENCH_batched.json", meta={"smoke": args.smoke}
+    )
+
+
+if __name__ == "__main__":
+    main()

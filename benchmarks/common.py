@@ -1,8 +1,18 @@
-"""Shared benchmark utilities: timing + CSV reporting."""
+"""Shared benchmark utilities: timing + CSV reporting + JSON trajectory.
+
+Every benchmark runner prints the human-readable ``name,us_per_call,
+derived`` CSV it always has, and can additionally serialize the same rows
+to a machine-readable ``BENCH_<name>.json`` via :meth:`Report.write_json`
+-- the per-PR perf trajectory artifact (uploaded by the CI bench-smoke
+job, diffable across commits).
+"""
 
 from __future__ import annotations
 
+import json
+import platform
 import time
+from pathlib import Path
 
 import jax
 
@@ -23,10 +33,56 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 
 class Report:
-    def __init__(self):
+    def __init__(self, name: str = ""):
+        self.name = name
         self.rows = []
+        self.records = []
 
     def add(self, name: str, us_per_call: float, derived: str = ""):
         row = f"{name},{us_per_call:.1f},{derived}"
         self.rows.append(row)
+        self.records.append(
+            {"name": name, "us_per_call": round(us_per_call, 1),
+             "derived": _parse_derived(derived)}
+        )
         print(row, flush=True)
+
+    def write_json(self, path, meta: dict | None = None) -> Path:
+        """Serialize the collected rows as a BENCH_*.json trajectory file."""
+        path = Path(path)
+        doc = {
+            "bench": self.name or path.stem,
+            "unix_time": int(time.time()),
+            "platform": {
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "machine": platform.machine(),
+                "python": platform.python_version(),
+            },
+            "meta": meta or {},
+            "rows": self.records,
+        }
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {path}", flush=True)
+        return path
+
+
+def _parse_derived(derived: str) -> dict:
+    """Split a ``k1=v1;k2=v2`` derived string into a dict (numbers where
+    possible); free-form fragments land under ``"note"``."""
+    out: dict = {}
+    notes = []
+    for frag in filter(None, derived.split(";")):
+        if "=" in frag:
+            key, val = frag.split("=", 1)
+            try:
+                out[key] = float(val)
+            except ValueError:
+                out[key] = val
+        else:
+            notes.append(frag)
+    if notes:
+        out["note"] = ";".join(notes)
+    return out

@@ -21,9 +21,20 @@ def main() -> None:
     report = Report()
     print("name,us_per_call,derived", flush=True)
 
+    # bench_solver and bench_batched track the cross-PR perf trajectory:
+    # their rows also land in machine-readable BENCH_*.json files.
     from benchmarks import bench_solver  # noqa: E402
 
-    bench_solver.run(report)
+    solver_report = Report("solver")
+    bench_solver.run(solver_report)
+    solver_report.write_json("BENCH_solver.json")
+    jax.clear_caches()
+
+    from benchmarks import bench_batched  # noqa: E402
+
+    batched_report = Report("batched")
+    bench_batched.run(batched_report)
+    batched_report.write_json("BENCH_batched.json")
     jax.clear_caches()
 
     from benchmarks import bench_reorder  # noqa: E402

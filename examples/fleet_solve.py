@@ -1,0 +1,88 @@
+"""Fleet solves: batched many-system factorization + the SolverEngine.
+
+The paper's target workload is sequences of moderate banded systems
+(implicit time integration: one Jacobian reused across many steps, many
+independent scenarios in flight).  This example runs that workload two
+ways:
+
+1. the batched lifecycle -- ``batch_plan``/``batch_factor`` factor a
+   whole fleet in one vmapped pass, ``solve_batch`` solves it in one
+   compiled executable;
+2. the serving path -- heterogeneous requests through ``SolverEngine``:
+   shape-bucketed, identity-padded, with an LRU factorization cache so
+   repeated Jacobians skip straight to the Krylov stage.
+
+    PYTHONPATH=src python examples/fleet_solve.py
+"""
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.sap_solver import fleet
+from repro.core import SaPOptions, batch_factor, batch_plan, factor, plan_banded
+from repro.core.banded import band_matvec, random_banded
+
+
+def batched_lifecycle_demo():
+    print("== batched lifecycle: 32 systems, one vmapped factor+solve ==")
+    s, n, k = 32, 2048, 8
+    opts = SaPOptions(p=8, variant="C", tol=1e-6, maxiter=200)
+    bands = [jnp.asarray(random_banded(n, k, d=1.0, seed=i), jnp.float32)
+             for i in range(s)]
+    rng = np.random.default_rng(0)
+    xs = np.stack([rng.normal(size=n) for _ in range(s)])
+    bmat = jnp.stack([band_matvec(bands[i], jnp.asarray(xs[i], jnp.float32))
+                      for i in range(s)])
+
+    t0 = time.perf_counter()
+    for i in range(s):  # the naive way: one lifecycle per system
+        factor(plan_banded(bands[i], opts)).solve(bmat[i]).x.block_until_ready()
+    t_loop = time.perf_counter() - t0
+
+    bfac = batch_factor(batch_plan(bands, opts))  # warm the jit caches
+    res = bfac.solve_batch(bmat)
+    t0 = time.perf_counter()
+    bfac = batch_factor(batch_plan(bands, opts))
+    res = bfac.solve_batch(bmat)
+    res.x.block_until_ready()
+    t_batched = time.perf_counter() - t0
+
+    err = np.abs(np.asarray(res.x)[:, :n] - xs).max()
+    print(f"  python loop   : {t_loop * 1e3:9.1f} ms")
+    print(f"  batched       : {t_batched * 1e3:9.1f} ms "
+          f"({t_loop / t_batched:.1f}x)  maxerr={err:.1e} "
+          f"conv={bool(np.asarray(res.converged).all())}")
+
+
+def engine_demo():
+    print("== SolverEngine: heterogeneous fleet, cached factorizations ==")
+    cfg = fleet()
+    eng = cfg.to_engine(p=8)
+    rng = np.random.default_rng(1)
+    # 4 distinct Jacobians of different (N, K), re-solved over 8 "time
+    # steps" with fresh right-hand sides: 32 requests, 4 factorizations.
+    mats = [np.float32(random_banded(1500 + 700 * i, 8 + 4 * (i % 2),
+                                     d=1.1, seed=i))
+            for i in range(4)]
+    for _ in range(8):
+        for band in mats:
+            eng.submit_system(band, rng.normal(size=band.shape[0]))
+    done = eng.run_until_drained()
+    conv = all(r.result.converged for r in done)
+    buckets = sorted({r.result.bucket for r in done})
+    print(f"  solved={len(done)} conv={conv} steps={eng.stats['steps']}")
+    print(f"  factored={eng.stats['factored_systems']} "
+          f"cache_hit_rate={eng.cache_hit_rate:.0%} "
+          f"throughput={eng.systems_per_second:.1f} sys/s")
+    print(f"  compiled buckets (N', K', P): {buckets}")
+
+
+if __name__ == "__main__":
+    batched_lifecycle_demo()
+    engine_demo()

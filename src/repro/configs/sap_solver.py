@@ -32,6 +32,14 @@ class SolverConfig:
     tol: float = 1e-8
     maxiter: int = 200
     precond_dtype: str = "float32"  # bfloat16 on TPU = paper's mixed precision
+    # batching knobs (the fleet-serving path: repro.serve.solver_engine).
+    # max_batch caps the per-step system batch; fac_cache sizes the LRU of
+    # cached factorizations (keyed by matrix fingerprint); bucket_rounding
+    # controls how heterogeneous (N, K) requests share compiled shapes
+    # ("pow2" = round up to powers of two, "exact" = identical shapes only).
+    max_batch: int = 32
+    fac_cache: int = 128
+    bucket_rounding: str = "pow2"
 
     def to_sap_options(self, p: int):
         """Map this workload config onto single-device solver options (the
@@ -46,6 +54,17 @@ class SolverConfig:
             tol=self.tol,
             maxiter=self.maxiter,
             precond_dtype=self.precond_dtype,
+        )
+
+    def to_engine(self, p: int):
+        """Build the fleet-serving engine this workload config describes."""
+        from repro.serve.solver_engine import SolverEngine
+
+        return SolverEngine(
+            self.to_sap_options(p),
+            max_batch=self.max_batch,
+            cache_size=self.fac_cache,
+            rounding=self.bucket_rounding,
         )
 
 
@@ -76,3 +95,10 @@ def exact() -> SolverConfig:
     the exact reduced system -- solved in log-depth -- is required."""
     return SolverConfig(name="sap-solver-exact", n=200_000, k=200,
                         variant="E", d=0.5)
+
+
+def fleet() -> SolverConfig:
+    """The throughput regime: many moderate systems (implicit time
+    integration), served batched with cached factorizations."""
+    return SolverConfig(name="sap-solver-fleet", n=16_384, k=16,
+                        tol=1e-6, max_batch=64, fac_cache=256)

@@ -40,6 +40,19 @@ from .cyclic_reduction import (
     pcr_solve,
     resolve_reduced_solver,
 )
+from .batched import (
+    BatchedSaPFactorization,
+    BatchedSaPPlan,
+    batch_factor,
+    batch_plan,
+    bucket_by_shape,
+    bucket_shape,
+    index_factorization,
+    pad_band_to,
+    pad_rhs_to,
+    stack_factorizations,
+    unpad_solution,
+)
 from .krylov import KrylovResult, bicgstab2, bicgstab2_many, cg, cg_many
 from .operators import BandedOperator, CsrOperator, LinearOperator, as_operator
 from .sap import (
@@ -59,6 +72,8 @@ from .spike import SaPPreconditioner, build_preconditioner
 
 __all__ = [
     "BandedOperator",
+    "BatchedSaPFactorization",
+    "BatchedSaPPlan",
     "BCRFactors",
     "BlockTridiag",
     "BTFactors",
@@ -76,8 +91,12 @@ __all__ = [
     "band_matvec",
     "band_to_block_tridiag",
     "band_to_dense",
+    "batch_factor",
+    "batch_plan",
     "bcr_factor",
     "bcr_solve",
+    "bucket_by_shape",
+    "bucket_shape",
     "bicgstab2",
     "bicgstab2_many",
     "btf_ref",
@@ -92,8 +111,11 @@ __all__ = [
     "diag_dominance_factor",
     "factor",
     "gj_inverse",
+    "index_factorization",
     "oscillatory_banded",
+    "pad_band_to",
     "pad_banded",
+    "pad_rhs_to",
     "padded_partition_size",
     "pcr_factor",
     "pcr_solve",
@@ -105,4 +127,6 @@ __all__ = [
     "resolve_variant",
     "solve_banded",
     "solve_sparse",
+    "stack_factorizations",
+    "unpad_solution",
 ]

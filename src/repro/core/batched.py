@@ -1,0 +1,395 @@
+"""Batched many-systems solves: one factorization/solve over a fleet axis.
+
+The lifecycle API (:mod:`repro.core.sap`) amortizes the expensive stages
+across right-hand sides of a *single* matrix.  The paper's target
+workload, though, is sequences of moderately sized banded systems -- one
+per time step, one per scenario, one per user -- and serving such fleets
+wants a *system* batch axis: factor S independent systems in one vmapped
+device pass and solve them in one compiled executable, instead of S
+python-loop round trips.
+
+Two layers live here:
+
+1. **Batched lifecycle** -- :func:`batch_plan` / :func:`batch_factor`
+   produce a :class:`BatchedSaPFactorization`: a stacked
+   :class:`~repro.core.sap.SaPFactorization` pytree whose data leaves
+   carry a leading system axis (built by vmapping the device stages of
+   ``sap.factor``), with ``solve_batch`` (one RHS per system, ``(S, N)``)
+   and ``solve_batch_many`` (``(S, N, R)``).
+
+2. **Bucketing** -- heterogeneous fleets cannot share a compiled shape.
+   :func:`bucket_shape` / :func:`bucket_by_shape` round each system's
+   ``(N, K)`` up to a shared bucket (power-of-two rounding by default) and
+   :func:`pad_band_to` embeds a system *exactly* into the bucket shape:
+   identity rows with zero RHS below, zero band columns on the sides.
+   Padded rows decouple completely, so the bucketized solve agrees with
+   the unpadded solve on the original rows to iteration tolerance -- no
+   approximation is introduced (see ``tests/test_batched.py``).
+
+The per-system factorizations inside a batch are slicable
+(:func:`index_factorization`) and re-stackable
+(:func:`stack_factorizations`), which is what the serving engine
+(:mod:`repro.serve.solver_engine`) uses to mix cached and freshly
+factored systems inside one batched solve.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .banded import band_to_block_tridiag, diag_dominance_factor
+from .operators import BandedOperator
+from .sap import (
+    SaPFactorization,
+    SaPOptions,
+    SaPSolveResult,
+    _precond_dtype,
+    _solve_impl,
+    resolve_variant,
+)
+from .spike import build_preconditioner
+
+
+# ---------------------------------------------------------------------------
+# Bucketing: shared compiled shapes for heterogeneous fleets
+# ---------------------------------------------------------------------------
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length()
+
+
+def bucket_shape(
+    n: int, k: int, p: int, rounding: str = "pow2"
+) -> Tuple[int, int, int]:
+    """Round a system's ``(N, K)`` up to its bucket ``(N', K', P)``.
+
+    ``rounding="pow2"`` keeps the number of distinct compiled shapes
+    logarithmic in the size spread (at most ~2x padding waste);
+    ``"exact"`` buckets only identical shapes together.  ``K'`` is never
+    rounded below 2 so degenerate K=0/1 systems still form K x K blocks.
+    """
+    if rounding == "pow2":
+        kb = max(_next_pow2(k), 2)
+        nb = max(_next_pow2(n), p * kb)
+    elif rounding == "exact":
+        kb = max(k, 2)
+        nb = max(n, p * kb)
+    else:
+        raise ValueError(f"unknown bucket rounding {rounding!r}")
+    # block-tridiag partitioning pads to P * M * K' anyway; absorb that
+    # padding into the bucket so the bucket key IS the compiled shape.
+    nb = _round_up(nb, p * kb)
+    return nb, kb, p
+
+
+def bucket_by_shape(
+    shapes: Sequence[Tuple[int, int]], p: int, rounding: str = "pow2"
+) -> dict:
+    """Group systems by shared compiled shape.
+
+    ``shapes`` is a sequence of per-system ``(N, K)``; returns an ordered
+    ``{(N', K', P): [indices...]}`` mapping (insertion order = first
+    occurrence, so callers can drain buckets deterministically).
+    """
+    buckets: dict = {}
+    for i, (n, k) in enumerate(shapes):
+        buckets.setdefault(bucket_shape(n, k, p, rounding), []).append(i)
+    return buckets
+
+
+def pad_band_to(band: jax.Array, n_pad: int, k_pad: int) -> jax.Array:
+    """Embed an (N, 2K+1) band exactly into bucket shape (N', 2K'+1).
+
+    Width: zero columns on both sides (the added diagonals are empty).
+    Rows: identity rows below (decoupled 1 * x = 0 equations).  The
+    padded system's solution restricted to the first N rows equals the
+    original solution exactly -- band storage has no out-of-range
+    entries, so original rows never reference padded columns.
+    """
+    band = jnp.asarray(band)
+    n, w = band.shape
+    k = (w - 1) // 2
+    if k_pad < k or n_pad < n:
+        raise ValueError(
+            f"bucket shape (N'={n_pad}, K'={k_pad}) smaller than system "
+            f"(N={n}, K={k})"
+        )
+    if k_pad != k:
+        side = jnp.zeros((n, k_pad - k), band.dtype)
+        band = jnp.concatenate([side, band, side], axis=1)
+    if n_pad != n:
+        rows = jnp.zeros((n_pad - n, 2 * k_pad + 1), band.dtype)
+        rows = rows.at[:, k_pad].set(1.0)
+        band = jnp.concatenate([band, rows], axis=0)
+    return band
+
+
+def pad_rhs_to(b: jax.Array, n_pad: int) -> jax.Array:
+    """Zero-pad a (N,) or (N, R) right-hand side to the bucket length."""
+    b = jnp.asarray(b)
+    if b.shape[0] == n_pad:
+        return b
+    pad = jnp.zeros((n_pad - b.shape[0],) + b.shape[1:], b.dtype)
+    return jnp.concatenate([b, pad], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: batch_plan (stack a fleet into one bucket shape)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BatchedSaPPlan:
+    """Host-side plan for a fleet of banded systems sharing one bucket.
+
+    bands   : (S, N', 2K'+1) stacked (padded) band storage
+    k, n    : bucket half-bandwidth K' and size N'
+    orig_ns : per-system original sizes (for un-padding results)
+    opts    : solver options shared by the whole batch
+    """
+
+    bands: jax.Array
+    k: int
+    n: int
+    orig_ns: Tuple[int, ...]
+    opts: SaPOptions
+
+    @property
+    def s(self) -> int:
+        return self.bands.shape[0]
+
+
+def batch_plan(
+    bands: Sequence[jax.Array] | jax.Array,
+    opts: Optional[SaPOptions] = None,
+    rounding: str = "pow2",
+) -> BatchedSaPPlan:
+    """Plan a fleet of banded systems as ONE stacked, bucket-padded batch.
+
+    ``bands`` is either an already-stacked (S, N, 2K+1) array (uniform
+    fleet) or a sequence of per-system (N_i, 2K_i+1) bands (heterogeneous
+    fleet).  All systems are padded to the single bucket covering the
+    largest ``(N, K)`` in the fleet -- callers that want *multiple*
+    compiled shapes split the fleet with :func:`bucket_by_shape` first
+    (the serving engine does exactly that).
+    """
+    opts = opts or SaPOptions()
+    if isinstance(bands, (jnp.ndarray, np.ndarray)) and np.ndim(bands) == 3:
+        stacked = jnp.asarray(bands)
+        s, n, w = stacked.shape
+        k = (w - 1) // 2
+        nb, kb, _ = bucket_shape(n, k, opts.p, rounding)
+        orig_ns = (n,) * s
+        if (nb, kb) != (n, k):
+            stacked = jnp.stack([pad_band_to(bd, nb, kb) for bd in stacked])
+        return BatchedSaPPlan(
+            bands=stacked, k=kb, n=nb, orig_ns=orig_ns, opts=opts
+        )
+
+    bands = [jnp.asarray(bd) for bd in bands]
+    if not bands:
+        raise ValueError("batch_plan needs at least one system")
+    shapes = [(bd.shape[0], (bd.shape[1] - 1) // 2) for bd in bands]
+    nb = max(bucket_shape(n, k, opts.p, rounding)[0] for n, k in shapes)
+    kb = max(bucket_shape(n, k, opts.p, rounding)[1] for n, k in shapes)
+    nb = _round_up(nb, opts.p * kb)  # one bucket for the whole fleet
+    stacked = jnp.stack([pad_band_to(bd, nb, kb) for bd in bands])
+    return BatchedSaPPlan(
+        bands=stacked,
+        k=kb,
+        n=nb,
+        orig_ns=tuple(n for n, _ in shapes),
+        opts=opts,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: batch_factor (vmapped device stages; one compiled factor pass)
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("fac",),
+    meta_fields=("s", "orig_ns"),
+)
+@dataclasses.dataclass(eq=False)
+class BatchedSaPFactorization:
+    """S independent SaP factorizations stacked over a leading system axis.
+
+    ``fac`` is a :class:`~repro.core.sap.SaPFactorization` whose *data*
+    leaves (band, preconditioner factors, d_factor) carry a leading
+    ``(S, ...)`` axis while the meta fields (bucket shape, tolerances)
+    are shared -- exactly the layout ``jax.vmap`` wants, so the whole
+    batch solves inside one compiled executable.
+    """
+
+    fac: SaPFactorization
+    s: int
+    orig_ns: Tuple[int, ...]
+
+    @property
+    def n(self) -> int:
+        return self.fac.n
+
+    @property
+    def k(self) -> int:
+        return self.fac.k
+
+    @property
+    def variant(self) -> str:
+        return self.fac.variant
+
+    def solve_batch(self, b: jax.Array) -> SaPSolveResult:
+        """Solve system i against RHS i: b (S, N') -> x (S, N')."""
+        b = jnp.asarray(b)
+        if b.ndim != 2 or b.shape != (self.s, self.n):
+            raise ValueError(
+                f"solve_batch expects one RHS per system, shape "
+                f"({self.s}, {self.n}); got {b.shape}"
+            )
+        return _solve_batch(self.fac, b)
+
+    def solve_batch_many(self, b: jax.Array) -> SaPSolveResult:
+        """Solve R RHS per system: b (S, N', R) -> x (S, N', R)."""
+        b = jnp.asarray(b)
+        if b.ndim != 3 or b.shape[:2] != (self.s, self.n):
+            raise ValueError(
+                f"solve_batch_many expects shape ({self.s}, {self.n}, R); "
+                f"got {b.shape}"
+            )
+        return _solve_batch_many(self.fac, b)
+
+
+@jax.jit
+def _solve_batch(fac: SaPFactorization, b: jax.Array) -> SaPSolveResult:
+    # every data leaf of ``fac`` carries the system axis: plain vmap.
+    return jax.vmap(_solve_impl)(fac, b)
+
+
+@jax.jit
+def _solve_batch_many(fac: SaPFactorization, b: jax.Array) -> SaPSolveResult:
+    inner_axes = SaPSolveResult(
+        x=1, iterations=0, resnorm=0, converged=0, d_factor=None
+    )
+
+    def one_system(f, bm):
+        return jax.vmap(
+            lambda bi: _solve_impl(f, bi), in_axes=1, out_axes=inner_axes
+        )(bm)
+
+    return jax.vmap(one_system)(fac, b)
+
+
+def _factor_key(opts: SaPOptions) -> tuple:
+    """The options that actually reach the factor stages -- tolerances and
+    Krylov knobs deliberately excluded so they never force a re-trace."""
+    return (opts.boost_eps, opts.precond_dtype, opts.reduced_solver)
+
+
+@lru_cache(maxsize=64)
+def _factor_stages_fn(k: int, p: int, variant: str, opts_key: tuple):
+    """Jitted, vmapped device stages of ``sap.factor`` for one bucket shape.
+
+    Cached per (bucket, variant, factor-relevant options) so the serving
+    engine's repeated ``batch_factor`` calls hit the same traced
+    executable instead of re-tracing every step.
+    """
+    boost_eps, precond_dtype, reduced_solver = opts_key
+    pdt = _precond_dtype(SaPOptions(precond_dtype=precond_dtype))
+
+    def stages(band):
+        d_factor = diag_dominance_factor(band)
+        bt = band_to_block_tridiag(band, max(k, 1), p)
+        pc = build_preconditioner(
+            bt,
+            variant=variant,
+            boost_eps=boost_eps,
+            precond_dtype=pdt,
+            reduced_solver=reduced_solver,
+        )
+        return pc, d_factor
+
+    return jax.jit(jax.vmap(stages))
+
+
+def batch_factor(bpl: BatchedSaPPlan) -> BatchedSaPFactorization:
+    """Factor every system in the batch in one vmapped device pass.
+
+    ``variant="auto"`` resolves once for the whole batch from the *worst*
+    (minimum) degree of diagonal dominance, so a single compiled shape
+    covers the batch: conservative -- any non-dominant member makes the
+    batch use the exact reduced system "E".  (Identity padding rows are
+    infinitely dominant and do not perturb the estimate.)
+    """
+    opts = bpl.opts
+    variant = opts.variant
+    if variant == "auto":
+        d_all = jax.jit(jax.vmap(diag_dominance_factor))(bpl.bands)
+        variant = resolve_variant("auto", float(jnp.min(d_all)))
+    stages = _factor_stages_fn(bpl.k, opts.p, variant, _factor_key(opts))
+    pcs, d_factors = stages(bpl.bands)
+    fac = SaPFactorization(
+        op=BandedOperator(band=bpl.bands, n=bpl.n, k=bpl.k),
+        pc=pcs,
+        b_perm=None,
+        x_perm=None,
+        n=bpl.n,
+        k=bpl.k,
+        tol=opts.tol,
+        maxiter=opts.maxiter,
+        use_cg=opts.use_cg,
+        iter_dtype=opts.iter_dtype,
+        d_factor=d_factors,
+    )
+    return BatchedSaPFactorization(fac=fac, s=bpl.s, orig_ns=bpl.orig_ns)
+
+
+# ---------------------------------------------------------------------------
+# Slicing / restacking (the serving engine's cache currency)
+# ---------------------------------------------------------------------------
+
+
+def index_factorization(bfac: BatchedSaPFactorization, i: int) -> SaPFactorization:
+    """Extract system ``i`` as a standalone single-system factorization."""
+    return jax.tree_util.tree_map(lambda x: x[i], bfac.fac)
+
+
+def stack_factorizations(
+    facs: Sequence[SaPFactorization], orig_ns: Optional[Sequence[int]] = None
+) -> BatchedSaPFactorization:
+    """Stack single-system factorizations (same bucket shape) into a batch.
+
+    The inverse of :func:`index_factorization`; all handles must share
+    their meta (bucket shape, variant, tolerances) -- i.e. come from the
+    same bucket -- or the stack is ill-formed and this raises.
+    """
+    facs = list(facs)
+    if not facs:
+        raise ValueError("stack_factorizations needs at least one handle")
+    treedefs = {jax.tree_util.tree_structure(f) for f in facs}
+    if len(treedefs) != 1:
+        raise ValueError(
+            "cannot stack factorizations from different buckets/variants: "
+            f"{len(treedefs)} distinct pytree structures"
+        )
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *facs)
+    ns = tuple(orig_ns) if orig_ns is not None else (facs[0].n,) * len(facs)
+    return BatchedSaPFactorization(fac=stacked, s=len(facs), orig_ns=ns)
+
+
+def unpad_solution(x: jax.Array, orig_ns: Sequence[int]) -> List[np.ndarray]:
+    """Slice a padded (S, N') batch solution back to per-system lengths."""
+    xs = np.asarray(x)
+    return [xs[i, :n] for i, n in enumerate(orig_ns)]

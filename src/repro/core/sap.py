@@ -40,6 +40,7 @@ operator is reused.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import NamedTuple, Optional
 
@@ -393,6 +394,18 @@ def _solve_many(fac: SaPFactorization, bmat: jax.Array) -> SaPSolveResult:
 # ---------------------------------------------------------------------------
 
 
+def _warn_one_shot(name: str, replacement: str) -> None:
+    # Python's default "once per location" warning filter dedups this;
+    # stacklevel=3 points at the caller of the public wrapper.
+    warnings.warn(
+        f"{name} re-runs the whole plan/factor pipeline on every call and "
+        f"is deprecated; use {replacement} and reuse the handle across "
+        f"right-hand sides (repro.core.sap lifecycle API)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def solve_banded(
     band: jax.Array,
     b: jax.Array,
@@ -403,6 +416,7 @@ def solve_banded(
     Deprecated for repeated solves: this re-plans and re-factors on every
     call.  Use ``factor(plan_banded(band, opts))`` and reuse the handle.
     """
+    _warn_one_shot("solve_banded", "factor(plan_banded(band, opts)).solve(b)")
     pl = plan_banded(band, opts)
     fac = factor(pl)
     res = fac.solve(jnp.asarray(b))
@@ -433,6 +447,7 @@ def solve_sparse(
     block-LU factorization on every call.  Use ``factor(plan(a, opts))``
     and reuse the handle across right-hand sides.
     """
+    _warn_one_shot("solve_sparse", "factor(plan(a, opts)).solve(b)")
     pl = plan(a_csr, opts)
     fac = factor(pl)
     res = fac.solve(jnp.asarray(np.asarray(b)))

@@ -106,6 +106,53 @@ def _specs(k, last, *idx_maps):
 _PARALLEL = CompilerParams(dimension_semantics=("parallel",))
 
 
+# ---------------------------------------------------------------------------
+# Lane padding (ROADMAP item: small-K blocks vs the 8x128 fp32 tile)
+# ---------------------------------------------------------------------------
+#
+# TPU vector memory tiles fp32 as (8, 128): the second-to-last dim must be
+# a multiple of 8 and the last a multiple of 128 for the compiled Pallas
+# path.  The reduced-chain block size K (and the RHS width R) are usually
+# far below 128, so the compiled kernels embed each (K, K) block into a
+# lane-aligned (K', K') block: D picks up an identity tail (decoupled
+# rows that carry the zero solution), E / F / RHS pick up zeros.  The
+# algebra is exact -- inv(blkdiag(A, I)) = blkdiag(inv(A), I) and all
+# cross terms against the padded rows are zero -- so the padded factors
+# solve the original chain bit-for-bit up to float roundoff; the solve
+# slices the padding back off.  ``lane_pad=None`` enables padding exactly
+# when the kernels compile for real (interpret=False); interpret-mode
+# tests can force it on to validate the padded algebra on CPU.
+
+
+def _lane_round(x: int) -> int:
+    """Round a block dim up to the fp32 tile: mult of 8, last-dim 128."""
+    return max(-(-x // 8) * 8, -(-x // 128) * 128)
+
+
+def _resolve_lane_pad(lane_pad: bool | None, interpret: bool) -> bool:
+    return (not interpret) if lane_pad is None else lane_pad
+
+
+def _pad_block_dim(x: jax.Array, kp: int, identity: bool) -> jax.Array:
+    """(m, K, K) -> (m, K', K'): identity (D blocks) or zero (E/F) tail."""
+    m, k, _ = x.shape
+    if kp == k:
+        return x
+    out = jnp.zeros((m, kp, kp), x.dtype)
+    if identity:
+        idx = jnp.arange(k, kp)
+        out = out.at[:, idx, idx].set(1.0)
+    return out.at[:, :k, :k].set(x)
+
+
+def _pad_last(x: jax.Array, rp: int) -> jax.Array:
+    """(m, K, R) -> (m, K, R'): zero-pad the trailing (lane) dim."""
+    if rp == x.shape[-1]:
+        return x
+    pad = jnp.zeros(x.shape[:-1] + (rp - x.shape[-1],), x.dtype)
+    return jnp.concatenate([x, pad], axis=-1)
+
+
 def _reduce_level_pallas(d, e, f, boost_eps, interpret):
     """One elimination level: (m, K, K) chain -> level factors + m/2 chain."""
     m, k, _ = d.shape
@@ -142,16 +189,30 @@ def _reduce_level_pallas(d, e, f, boost_eps, interpret):
     return level, (d_n, e_n, f_n)
 
 
-@functools.partial(jax.jit, static_argnames=("boost_eps", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("boost_eps", "interpret", "lane_pad")
+)
 def bcr_factor_pallas(
     d: jax.Array,
     e: jax.Array,
     f: jax.Array,
     boost_eps: float = DEFAULT_BOOST,
     interpret: bool = True,
+    lane_pad: bool | None = None,
 ) -> BCRFactors:
-    """Factor one chain (M, K, K) in log2(M) kernel-level rounds."""
-    m = d.shape[0]
+    """Factor one chain (M, K, K) in log2(M) kernel-level rounds.
+
+    ``lane_pad`` embeds small-K blocks into the (8, 128) fp32 tile before
+    the kernels run (see the lane-padding note above); the returned
+    factors then hold K'-sized blocks, which :func:`bcr_solve_pallas`
+    detects and undoes.  Default ``None`` = pad iff compiling for real.
+    """
+    m, k = d.shape[0], d.shape[1]
+    if _resolve_lane_pad(lane_pad, interpret):
+        kp = _lane_round(k)
+        d = _pad_block_dim(d, kp, identity=True)
+        e = _pad_block_dim(e, kp, identity=False)
+        f = _pad_block_dim(f, kp, identity=False)
     d, e, f = pad_chain(d, e, f)
     levels = []
     while d.shape[0] > 1:
@@ -161,11 +222,26 @@ def bcr_factor_pallas(
     return BCRFactors(levels=tuple(levels), root_inv=root_inv, m=m)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "lane_pad"))
 def bcr_solve_pallas(
-    factors: BCRFactors, b: jax.Array, interpret: bool = True
+    factors: BCRFactors, b: jax.Array, interpret: bool = True,
+    lane_pad: bool | None = None,
 ) -> jax.Array:
-    """Solve one factored chain: b (M, K, R) -> x (M, K, R)."""
+    """Solve one factored chain: b (M, K, R) -> x (M, K, R).
+
+    Factors produced with lane padding carry K'-sized blocks; the RHS is
+    embedded to match (zero rows) and the solution sliced back.  The RHS
+    width R is itself a lane dim and gets zero-padded to the 128 tile
+    whenever lane padding is active.
+    """
+    m, k0, r0 = b.shape
+    kp = factors.root_inv.shape[-1]  # block dim the factors were built at
+    if kp != k0:
+        b = jnp.concatenate(
+            [b, jnp.zeros((m, kp - k0, r0), b.dtype)], axis=1
+        )
+    if _resolve_lane_pad(lane_pad, interpret) or kp != k0:
+        b = _pad_last(b, -(-r0 // 128) * 128)
     m, k, r = b.shape
     sd = jax.ShapeDtypeStruct
     m_pad = 2 ** len(factors.levels) if factors.levels else 1
@@ -207,4 +283,4 @@ def bcr_solve_pallas(
             interpret=interpret,
             compiler_params=_PARALLEL,
         )(lv.a_odd, lv.e_odd, lv.f_odd, b_odd, x, x)
-    return x[:m]
+    return x[:factors.m, :k0, :r0]

@@ -48,6 +48,23 @@ def _interpret(impl: str) -> bool:
 # ---------------------------------------------------------------------------
 # Block-tridiagonal factor / solve
 # ---------------------------------------------------------------------------
+#
+# Both entry points are batch-aware: a 5-dim input carries a leading
+# *system* axis (S, P, M, K, K) -- a fleet of independent block-tridiagonal
+# systems (repro.core.batched).  Partitions are already an embarrassingly
+# parallel grid axis, so the batch axis FOLDS into it: the Pallas kernels
+# run one grid of S*P independent chains (a real batch grid axis, not a
+# silent per-system fallback), and the jnp reference path vectorizes over
+# the same folded axis.
+
+
+def _fold_batch(x: jax.Array) -> jax.Array:
+    """(S, P, ...) -> (S*P, ...): batch systems become extra partitions."""
+    return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+
+def _unfold_batch(x: jax.Array, s: int) -> jax.Array:
+    return x.reshape((s, x.shape[0] // s) + x.shape[1:])
 
 
 def block_tridiag_factor(
@@ -58,6 +75,16 @@ def block_tridiag_factor(
     impl: str | None = None,
 ) -> BTFactors:
     impl = impl or default_impl()
+    if d.ndim == 5:  # batched (S, P, M, K, K): fold batch into the grid
+        s = d.shape[0]
+        fac = block_tridiag_factor(
+            _fold_batch(d), _fold_batch(e), _fold_batch(f), boost_eps, impl
+        )
+        return BTFactors(
+            sinv=_unfold_batch(fac.sinv, s),
+            l=_unfold_batch(fac.l, s),
+            f=_unfold_batch(fac.f, s),
+        )
     if impl == "jnp":
         return ref.btf_ref(d, e, f, boost_eps)
     sinv, l = btf_pallas(d, e, f, boost_eps, interpret=_interpret(impl))
@@ -68,6 +95,14 @@ def block_tridiag_solve(
     factors: BTFactors, b: jax.Array, impl: str | None = None
 ) -> jax.Array:
     impl = impl or default_impl()
+    if b.ndim == 5:  # batched (S, P, M, K, R): fold batch into the grid
+        s = b.shape[0]
+        folded = BTFactors(
+            sinv=_fold_batch(factors.sinv),
+            l=_fold_batch(factors.l),
+            f=_fold_batch(factors.f),
+        )
+        return _unfold_batch(block_tridiag_solve(folded, _fold_batch(b), impl), s)
     if impl == "jnp":
         return ref.bts_ref(factors, b)
     return bts_pallas(
@@ -87,14 +122,26 @@ def block_tridiag_factor_chain(
     The recursive entry point for the SaP-E exact reduced interface system:
     the (P-1) coupled 2Kx2K interface blocks form one chain, factored by
     the same kernel as the partition factorization (grid (1, M)).
+
+    A 4-dim input (S, M, K, K) is a *batch* of independent chains -- which
+    is exactly the (P, M, K, K) partition layout, so the batch rides the
+    parallel grid axis for free.
     """
+    if d.ndim == 4:  # batched chains: the batch axis IS the partition axis
+        return block_tridiag_factor(d, e, f, boost_eps, impl=impl)
     return block_tridiag_factor(d[None], e[None], f[None], boost_eps, impl=impl)
 
 
 def block_tridiag_solve_chain(
     factors: BTFactors, b: jax.Array, impl: str | None = None
 ) -> jax.Array:
-    """Solve one factored chain: b (M, K, R) -> x (M, K, R)."""
+    """Solve one factored chain: b (M, K, R) -> x (M, K, R).
+
+    b of 4 dims (S, M, K, R) solves a batch of factored chains (the
+    batch axis rides the parallel partition grid axis).
+    """
+    if b.ndim == 4:
+        return block_tridiag_solve(factors, b, impl=impl)
     return block_tridiag_solve(factors, b[None], impl=impl)[0]
 
 

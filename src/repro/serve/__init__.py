@@ -1,1 +1,7 @@
 from .engine import Request, ServeEngine  # noqa: F401
+from .solver_engine import (  # noqa: F401
+    SolveOutcome,
+    SolveRequest,
+    SolverEngine,
+    matrix_fingerprint,
+)

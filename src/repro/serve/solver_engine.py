@@ -1,0 +1,264 @@
+"""Batched linear-solver serving engine: bucketed fleets, cached factors.
+
+The solver counterpart of :class:`repro.serve.engine.ServeEngine`: clients
+``submit()`` independent banded systems (one matrix + one RHS each) and
+the engine turns the pending queue into *batched* device work:
+
+1. **Bucketing** -- each request's ``(N, K)`` rounds up to a compiled
+   shape bucket (:func:`repro.core.batched.bucket_shape`); systems are
+   identity-padded into the bucket so heterogeneous fleets share one
+   executable without approximation.
+
+2. **Factorization cache** -- factorizations are cached in an LRU keyed
+   by a *matrix fingerprint* (content hash of the band bytes + the bucket
+   shape).  Implicit time stepping re-solves against the same (or slowly
+   refreshed) matrix every step: repeated fingerprints skip straight to
+   the Krylov stage, paying factor-once economics across requests, not
+   just across the RHS of one handle.
+
+3. **Batched dispatch** -- every :meth:`SolverEngine.step` drains up to
+   ``max_batch`` requests from ONE bucket, batch-factors the cache misses
+   in a single vmapped pass (:func:`repro.core.batched.batch_factor`),
+   stacks cached + fresh factorizations, and runs one ``solve_batch``.
+
+Cache-hit and throughput counters live on :attr:`SolverEngine.stats`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict, deque
+from typing import Deque, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched
+from repro.core.sap import SaPOptions
+
+
+def matrix_fingerprint(band) -> str:
+    """Content hash of a band-storage matrix (shape + dtype + bytes).
+
+    Host-side and cheap relative to a factorization; two requests carry
+    the same fingerprint iff their band arrays are bit-identical, which
+    is exactly the implicit-time-stepping reuse pattern (the Jacobian is
+    refreshed every few steps, not every solve).
+    """
+    a = np.ascontiguousarray(np.asarray(band))
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str((a.shape, a.dtype.str)).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One banded system A x = b submitted to the engine."""
+
+    rid: int
+    band: np.ndarray | jnp.ndarray  # (N, 2K+1) band storage
+    b: np.ndarray | jnp.ndarray  # (N,) right-hand side
+    fingerprint: Optional[str] = None  # filled by submit() if absent
+    result: Optional["SolveOutcome"] = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+@dataclasses.dataclass
+class SolveOutcome:
+    """Per-request result (device batch sliced back to the original N)."""
+
+    x: np.ndarray
+    iterations: float
+    resnorm: float
+    converged: bool
+    cache_hit: bool
+    bucket: Tuple[int, int, int]
+
+
+class SolverEngine:
+    """Shape-bucketed, factorization-caching batched solve server.
+
+    opts       : solver options shared by every request (p, variant, tol..)
+    max_batch  : per-step batch-size cap (one bucket per step)
+    cache_size : LRU capacity in cached factorizations
+    rounding   : bucket rounding policy ("pow2" | "exact")
+    """
+
+    def __init__(
+        self,
+        opts: Optional[SaPOptions] = None,
+        max_batch: int = 32,
+        cache_size: int = 128,
+        rounding: str = "pow2",
+    ):
+        self.opts = opts or SaPOptions()
+        self.max_batch = max_batch
+        self.cache_size = cache_size
+        self.rounding = rounding
+        self.queue: Deque[SolveRequest] = deque()
+        self._next_rid = 0
+        # (fingerprint, bucket) -> single-system SaPFactorization slice
+        self._cache: OrderedDict = OrderedDict()
+        self.stats = {
+            "submitted": 0,
+            "solved": 0,
+            "steps": 0,
+            "cache_hits": 0,
+            "cache_misses": 0,
+            "factored_systems": 0,
+            "evictions": 0,
+            "solve_seconds": 0.0,
+        }
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: SolveRequest) -> int:
+        if req.fingerprint is None:
+            req.fingerprint = matrix_fingerprint(req.band)
+        self.queue.append(req)
+        self.stats["submitted"] += 1
+        return req.rid
+
+    def submit_system(self, band, b) -> int:
+        """Convenience wrapper: wrap (band, b) in a request, return its rid."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self.submit(SolveRequest(rid=rid, band=band, b=b))
+        return rid
+
+    # -- cache --------------------------------------------------------------
+
+    def _cache_get(self, key):
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+        return hit
+
+    def _cache_put(self, key, value):
+        self._cache[key] = value
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+            self.stats["evictions"] += 1
+
+    @property
+    def cached_factorizations(self) -> int:
+        return len(self._cache)
+
+    # -- the engine tick ----------------------------------------------------
+
+    def step(self) -> List[SolveRequest]:
+        """One tick: solve up to ``max_batch`` requests of one bucket.
+
+        Picks the bucket with the most pending requests (largest batch =
+        best amortization), factors its cache misses in one vmapped pass,
+        then runs one batched solve.  Returns the completed requests.
+        """
+        if not self.queue:
+            return []
+        t0 = time.perf_counter()
+
+        shapes = [
+            (np.shape(r.band)[0], (np.shape(r.band)[1] - 1) // 2)
+            for r in self.queue
+        ]
+        buckets = batched.bucket_by_shape(shapes, self.opts.p, self.rounding)
+        bucket, idxs = max(buckets.items(), key=lambda kv: len(kv[1]))
+        idxs = set(idxs[: self.max_batch])
+        batch = [r for i, r in enumerate(self.queue) if i in idxs]
+        self.queue = deque(r for i, r in enumerate(self.queue) if i not in idxs)
+
+        nb, kb, _ = bucket
+        # 1) factor the cache misses in ONE vmapped pass.  A batch may
+        #    repeat a fingerprint (same Jacobian, many RHS requests): each
+        #    distinct matrix is factored once, duplicates count as hits.
+        #    ``step_facs`` pins this step's factorizations locally -- the
+        #    LRU may evict mid-step (cache_size < distinct matrices in
+        #    one batch) without pulling them out from under the solve.
+        step_facs: dict = {}
+        miss_fps: List[str] = []
+        miss_reqs: List[SolveRequest] = []
+        is_hit: List[bool] = []
+        for r in batch:
+            cached = self._cache_get((r.fingerprint, bucket))
+            if cached is not None:
+                step_facs[r.fingerprint] = cached
+                is_hit.append(True)
+            elif r.fingerprint in miss_fps:
+                is_hit.append(True)
+            else:
+                is_hit.append(False)
+                miss_fps.append(r.fingerprint)
+                miss_reqs.append(r)
+        if miss_reqs:
+            bpl = batched.batch_plan(
+                [r.band for r in miss_reqs], self.opts, rounding=self.rounding
+            )
+            assert (bpl.n, bpl.k) == (nb, kb), "bucketing is shape-consistent"
+            bfac = batched.batch_factor(bpl)
+            # Sticky "auto" resolution: cached and future factorizations
+            # must share one pytree structure to stack into one batch, so
+            # the first factored batch pins the resolved variant.
+            if self.opts.variant == "auto":
+                self.opts = dataclasses.replace(
+                    self.opts, variant=bfac.variant
+                )
+            for j, fp in enumerate(miss_fps):
+                fac = batched.index_factorization(bfac, j)
+                step_facs[fp] = fac
+                self._cache_put((fp, bucket), fac)
+            self.stats["factored_systems"] += len(miss_reqs)
+        self.stats["cache_hits"] += sum(is_hit)
+        self.stats["cache_misses"] += len(is_hit) - sum(is_hit)
+
+        # 2) one batched solve over cached + fresh factorizations
+        facs = [step_facs[r.fingerprint] for r in batch]
+        orig_ns = [np.shape(r.band)[0] for r in batch]
+        bfac = batched.stack_factorizations(facs, orig_ns)
+        bmat = jnp.stack(
+            [batched.pad_rhs_to(jnp.asarray(r.b), nb) for r in batch]
+        )
+        res = bfac.solve_batch(bmat)
+        xs = batched.unpad_solution(res.x, orig_ns)
+        iters = np.asarray(res.iterations)
+        rnorm = np.asarray(res.resnorm)
+        conv = np.asarray(res.converged)
+        for i, r in enumerate(batch):
+            r.result = SolveOutcome(
+                x=xs[i],
+                iterations=float(iters[i]),
+                resnorm=float(rnorm[i]),
+                converged=bool(conv[i]),
+                cache_hit=is_hit[i],
+                bucket=bucket,
+            )
+        self.stats["solved"] += len(batch)
+        self.stats["steps"] += 1
+        self.stats["solve_seconds"] += time.perf_counter() - t0
+        return batch
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[SolveRequest]:
+        done: List[SolveRequest] = []
+        steps = 0
+        while self.queue and steps < max_steps:
+            done.extend(self.step())
+            steps += 1
+        return done
+
+    # -- derived stats ------------------------------------------------------
+
+    @property
+    def cache_hit_rate(self) -> float:
+        tot = self.stats["cache_hits"] + self.stats["cache_misses"]
+        return self.stats["cache_hits"] / tot if tot else 0.0
+
+    @property
+    def systems_per_second(self) -> float:
+        sec = self.stats["solve_seconds"]
+        return self.stats["solved"] / sec if sec > 0 else 0.0

@@ -54,6 +54,49 @@ def test_bts_matches_ref(p, m, k, r):
                                atol=1e-6)
 
 
+@pytest.mark.parametrize("s,p,m,k,r", [(2, 3, 4, 4, 2), (4, 1, 3, 8, 1)])
+def test_batched_btf_bts_fold_matches_per_system(s, p, m, k, r):
+    """5-dim inputs (a leading system axis) fold the batch into the
+    parallel partition grid axis: same math as looping the systems, for
+    both the jnp reference and the interpret-mode kernels."""
+    rng = np.random.default_rng(5)
+    d = _rand(rng, (s, p, m, k, k)) + 4 * jnp.eye(k)
+    e = _rand(rng, (s, p, m, k, k)) * 0.3
+    f = _rand(rng, (s, p, m, k, k)) * 0.3
+    b = _rand(rng, (s, p, m, k, r))
+    for impl in ("jnp", "interpret"):
+        fac = ops.block_tridiag_factor(d, e, f, impl=impl)
+        assert fac.sinv.shape == (s, p, m, k, k)
+        x = ops.block_tridiag_solve(fac, b, impl=impl)
+        assert x.shape == b.shape
+        for i in range(s):
+            fac_i = ops.block_tridiag_factor(d[i], e[i], f[i], impl=impl)
+            np.testing.assert_allclose(
+                np.asarray(fac.sinv[i]), np.asarray(fac_i.sinv),
+                rtol=1e-5, atol=1e-6)
+            x_i = ops.block_tridiag_solve(fac_i, b[i], impl=impl)
+            np.testing.assert_allclose(
+                np.asarray(x[i]), np.asarray(x_i), rtol=1e-5, atol=1e-6)
+
+
+def test_batched_chain_ops_ride_partition_axis():
+    """(S, M, K, K) chain batches reuse the partition grid axis."""
+    rng = np.random.default_rng(6)
+    s, m, k, r = 3, 5, 4, 2
+    d = _rand(rng, (s, m, k, k)) + 4 * jnp.eye(k)
+    e = _rand(rng, (s, m, k, k)) * 0.3
+    f = _rand(rng, (s, m, k, k)) * 0.3
+    b = _rand(rng, (s, m, k, r))
+    fac = ops.block_tridiag_factor_chain(d, e, f, impl="interpret")
+    x = ops.block_tridiag_solve_chain(fac, b, impl="interpret")
+    for i in range(s):
+        fac_i = ops.block_tridiag_factor_chain(d[i], e[i], f[i],
+                                               impl="interpret")
+        x_i = ops.block_tridiag_solve_chain(fac_i, b[i], impl="interpret")
+        np.testing.assert_allclose(np.asarray(x[i]), np.asarray(x_i),
+                                   rtol=1e-5, atol=1e-6)
+
+
 def test_btf_pivot_boost_in_kernel():
     # a singular diagonal block must not produce NaN thanks to boosting
     d = jnp.zeros((1, 2, 4, 4)).at[:, :, 0, 0].set(1.0)

@@ -209,6 +209,15 @@ def test_sparse_rhs_dtype_not_hardcoded():
     assert jnp.issubdtype(res_i.x.dtype, jnp.floating)
 
 
+def test_one_shot_wrappers_emit_deprecation_warning():
+    band, xstar, b = _banded_system()
+    with pytest.warns(DeprecationWarning, match="solve_banded"):
+        solve_banded(band, b, SaPOptions(p=4, tol=1e-4, maxiter=100))
+    csr, xstar2, b2 = _sparse_system()
+    with pytest.warns(DeprecationWarning, match="solve_sparse"):
+        solve_sparse(csr, b2, SaPOptions(p=4, tol=1e-4, maxiter=100))
+
+
 def test_banded_operator_wrapping():
     band, xstar, b = _banded_system()
     op = BandedOperator.from_band(band)

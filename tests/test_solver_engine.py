@@ -1,0 +1,184 @@
+"""SolverEngine: bucketed batched serving with an LRU factorization cache."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SaPOptions, batched
+from repro.core.banded import band_matvec, random_banded
+from repro.serve import SolveRequest, SolverEngine, matrix_fingerprint
+
+
+def _mat(n, k, seed, d=1.1):
+    return np.float32(random_banded(n, k, d=d, seed=seed))
+
+
+def _rhs_for(band, seed):
+    n = band.shape[0]
+    x = np.random.default_rng(seed).normal(size=n)
+    b = np.asarray(band_matvec(jnp.asarray(band), jnp.asarray(x, jnp.float32)))
+    return x, b
+
+
+def _engine(**kw):
+    kw.setdefault("max_batch", 8)
+    return SolverEngine(SaPOptions(p=4, variant="C", tol=1e-6, maxiter=300), **kw)
+
+
+def test_fingerprint_is_content_keyed():
+    a = _mat(64, 3, seed=0)
+    assert matrix_fingerprint(a) == matrix_fingerprint(a.copy())
+    b = a.copy()
+    b[10, 1] += 1e-3
+    assert matrix_fingerprint(a) != matrix_fingerprint(b)
+    # dtype and shape are part of the key
+    assert matrix_fingerprint(a) != matrix_fingerprint(a.astype(np.float64))
+
+
+def test_engine_solves_heterogeneous_fleet():
+    eng = _engine()
+    mats = [_mat(150 + 37 * i, 3 + i % 2, seed=i) for i in range(5)]
+    truth = {}
+    for i, band in enumerate(mats):
+        x, b = _rhs_for(band, seed=50 + i)
+        truth[eng.submit_system(band, b)] = x
+    done = eng.run_until_drained()
+    assert len(done) == 5 and eng.queue == type(eng.queue)()
+    for r in done:
+        assert r.result.converged
+        x = truth[r.rid]
+        assert r.result.x.shape == x.shape  # un-padded to original N
+        err = np.linalg.norm(r.result.x - x) / np.linalg.norm(x)
+        assert err < 1e-3
+
+
+def test_engine_factor_runs_once_for_repeated_fingerprints(monkeypatch):
+    """The cache-hit call-count contract: re-submitting the same matrix
+    across steps (implicit time stepping) factors it exactly once."""
+    calls = {"batches": 0, "systems": 0}
+    real = batched.batch_factor
+
+    def counting(bpl):
+        calls["batches"] += 1
+        calls["systems"] += bpl.s
+        return real(bpl)
+
+    monkeypatch.setattr(batched, "batch_factor", counting)
+    eng = _engine()
+    band = _mat(200, 4, seed=7)
+    for step in range(4):  # 4 "time steps", fresh RHS each, same matrix
+        x, b = _rhs_for(band, seed=step)
+        eng.submit_system(band, b)
+        done = eng.step()
+        assert len(done) == 1 and done[0].result.converged
+        assert done[0].result.cache_hit == (step > 0)
+    assert calls == {"batches": 1, "systems": 1}
+    assert eng.stats["cache_hits"] == 3
+    assert eng.stats["cache_misses"] == 1
+    assert eng.stats["factored_systems"] == 1
+    assert eng.cache_hit_rate == 0.75
+
+
+def test_engine_duplicate_fingerprints_in_one_batch(monkeypatch):
+    """Duplicates inside a single step factor once; later copies are hits."""
+    calls = {"systems": 0}
+    real = batched.batch_factor
+
+    def counting(bpl):
+        calls["systems"] += bpl.s
+        return real(bpl)
+
+    monkeypatch.setattr(batched, "batch_factor", counting)
+    eng = _engine()
+    band = _mat(200, 4, seed=1)
+    for i in range(4):  # same Jacobian, 4 outstanding RHS requests
+        eng.submit_system(band, _rhs_for(band, seed=i)[1])
+    done = eng.step()
+    assert len(done) == 4
+    assert calls["systems"] == 1
+    assert eng.stats["cache_hits"] == 3 and eng.stats["cache_misses"] == 1
+
+
+def test_engine_lru_eviction_stays_correct():
+    eng = _engine(cache_size=1)
+    m1, m2 = _mat(200, 4, seed=1), _mat(200, 4, seed=2)
+    for rep in range(2):  # alternate matrices: each round evicts the other
+        for seed, band in ((rep, m1), (10 + rep, m2)):
+            x, b = _rhs_for(band, seed=seed)
+            eng.submit_system(band, b)
+            (done,) = eng.step()
+            assert done.result.converged
+            err = np.linalg.norm(done.result.x - x) / np.linalg.norm(x)
+            assert err < 1e-3
+    assert eng.stats["evictions"] >= 2
+    assert eng.cached_factorizations == 1
+
+
+def test_engine_batch_larger_than_cache_survives_midstep_eviction():
+    """Regression: cache_size below the distinct matrices of one step
+    must not lose the factorizations the in-flight batch still needs."""
+    eng = _engine(max_batch=8, cache_size=1)
+    truth = {}
+    for i in range(3):  # 3 distinct same-bucket matrices in ONE step
+        band = _mat(200, 4, seed=20 + i)
+        x, b = _rhs_for(band, seed=i)
+        truth[eng.submit_system(band, b)] = x
+    done = eng.step()
+    assert len(done) == 3
+    for r in done:
+        assert r.result.converged
+        err = np.linalg.norm(r.result.x - truth[r.rid])
+        assert err / np.linalg.norm(truth[r.rid]) < 1e-3
+    assert eng.cached_factorizations == 1  # LRU still capped
+    assert eng.stats["evictions"] == 2
+
+
+def test_engine_batches_one_bucket_per_step():
+    """max_batch caps a step; different buckets never share a batch."""
+    eng = _engine(max_batch=2)
+    small = [_mat(100, 3, seed=i) for i in range(3)]  # bucket (128, 4, 4)
+    big = _mat(600, 3, seed=9)  # bucket (1024, 4, 4)
+    for band in [*small, big]:
+        eng.submit_system(band, _rhs_for(band, seed=0)[1])
+    done1 = eng.step()  # largest bucket first, capped at 2
+    assert len(done1) == 2
+    assert {r.result.bucket for r in done1} == {(128, 4, 4)}
+    done_rest = eng.run_until_drained()
+    assert len(done_rest) == 2
+    assert eng.stats["solved"] == 4 and eng.stats["steps"] == 3
+
+
+def test_engine_sticky_auto_variant():
+    """variant='auto' pins itself after the first factored batch so cached
+    and fresh factorizations always stack into one pytree structure."""
+    eng = SolverEngine(
+        SaPOptions(p=4, variant="auto", tol=1e-5, maxiter=200), max_batch=4
+    )
+    band = _mat(200, 4, seed=3, d=1.5)  # dominant -> resolves to C
+    x, b = _rhs_for(band, seed=0)
+    eng.submit_system(band, b)
+    (done,) = eng.step()
+    assert done.result.converged
+    assert eng.opts.variant == "C"
+    # a second, different matrix reuses the pinned variant
+    band2 = _mat(230, 4, seed=4, d=1.5)
+    x2, b2 = _rhs_for(band2, seed=1)
+    eng.submit_system(band2, b2)
+    (done2,) = eng.step()
+    assert done2.result.converged
+
+
+def test_engine_step_on_empty_queue_is_noop():
+    eng = _engine()
+    assert eng.step() == []
+    assert eng.stats["steps"] == 0
+
+
+def test_submit_precomputed_fingerprint_respected():
+    eng = _engine()
+    band = _mat(100, 3, seed=0)
+    _, b = _rhs_for(band, seed=0)
+    req = SolveRequest(rid=99, band=band, b=b, fingerprint="custom-fp")
+    eng.submit(req)
+    assert req.fingerprint == "custom-fp"
+    (done,) = eng.step()
+    assert done.rid == 99 and done.result.converged
