@@ -37,6 +37,13 @@ def main() -> None:
     batched_report.write_json("BENCH_batched.json")
     jax.clear_caches()
 
+    from benchmarks import bench_serve  # noqa: E402
+
+    serve_report = Report("serve")
+    bench_serve.run(serve_report)
+    serve_report.write_json("BENCH_serve.json")
+    jax.clear_caches()
+
     from benchmarks import bench_reorder  # noqa: E402
 
     bench_reorder.run(report)

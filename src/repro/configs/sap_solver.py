@@ -40,6 +40,17 @@ class SolverConfig:
     max_batch: int = 32
     fac_cache: int = 128
     bucket_rounding: str = "pow2"
+    # admission / scheduling knobs (the async serving path:
+    # repro.serve.service.AsyncSolverService).  queue_cap bounds the
+    # pending set before submit blocks or raises QueueFull; deadline_s is
+    # the default per-request deadline (None = no deadline); the thrash
+    # guard widens bucket_rounding "exact" -> "pow2" when the LRU sheds
+    # more than thrash_ratio factorizations per solve over a window of
+    # thrash_window solves.
+    queue_cap: int = 256
+    deadline_s: float | None = None
+    thrash_window: int = 32
+    thrash_ratio: float = 0.5
 
     def to_sap_options(self, p: int):
         """Map this workload config onto single-device solver options (the
@@ -65,6 +76,24 @@ class SolverConfig:
             max_batch=self.max_batch,
             cache_size=self.fac_cache,
             rounding=self.bucket_rounding,
+        )
+
+    def to_service(self, p: int, start: bool = True):
+        """Build the async multi-tenant serving front end (futures +
+        background drain + deadline/priority scheduling) this workload
+        config describes."""
+        from repro.serve.service import AsyncSolverService
+
+        return AsyncSolverService(
+            self.to_sap_options(p),
+            max_batch=self.max_batch,
+            cache_size=self.fac_cache,
+            rounding=self.bucket_rounding,
+            queue_cap=self.queue_cap,
+            default_deadline_s=self.deadline_s,
+            thrash_window=self.thrash_window,
+            thrash_ratio=self.thrash_ratio,
+            start=start,
         )
 
 
@@ -95,6 +124,15 @@ def exact() -> SolverConfig:
     the exact reduced system -- solved in log-depth -- is required."""
     return SolverConfig(name="sap-solver-exact", n=200_000, k=200,
                         variant="E", d=0.5)
+
+
+def service() -> SolverConfig:
+    """The multi-tenant serving regime: concurrent clients with mixed
+    priorities/deadlines through the async front end; variant is "auto"
+    so the per-dominance-class overrides do the routing."""
+    return SolverConfig(name="sap-solver-service", n=16_384, k=16,
+                        variant="auto", tol=1e-6, max_batch=32,
+                        fac_cache=256, queue_cap=512, deadline_s=30.0)
 
 
 def fleet() -> SolverConfig:

@@ -11,15 +11,23 @@ the engine turns the pending queue into *batched* device work:
 
 2. **Factorization cache** -- factorizations are cached in an LRU keyed
    by a *matrix fingerprint* (content hash of the band bytes + the bucket
-   shape).  Implicit time stepping re-solves against the same (or slowly
-   refreshed) matrix every step: repeated fingerprints skip straight to
-   the Krylov stage, paying factor-once economics across requests, not
-   just across the RHS of one handle.
+   shape + the factor-relevant options).  Implicit time stepping
+   re-solves against the same (or slowly refreshed) matrix every step:
+   repeated fingerprints skip straight to the Krylov stage, paying
+   factor-once economics across requests, not just across the RHS of one
+   handle.
 
 3. **Batched dispatch** -- every :meth:`SolverEngine.step` drains up to
    ``max_batch`` requests from ONE bucket, batch-factors the cache misses
    in a single vmapped pass (:func:`repro.core.batched.batch_factor`),
    stacks cached + fresh factorizations, and runs one ``solve_batch``.
+
+The engine is **thread-safe**: the pending queue, the LRU cache, and the
+``stats`` dict each sit behind a lock, so an async drain thread
+(:class:`repro.serve.service.AsyncSolverService`) can run
+:meth:`solve_prepared` while client threads keep ``submit()``-ing.  Device
+solves run *outside* the locks -- host-side bookkeeping of incoming
+requests overlaps in-flight device work.
 
 Cache-hit and throughput counters live on :attr:`SolverEngine.stats`.
 """
@@ -28,15 +36,17 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
+import warnings
 from collections import OrderedDict, deque
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import batched
-from repro.core.sap import SaPOptions
+from repro.core.sap import SaPOptions, resolve_variant
 
 
 def matrix_fingerprint(band) -> str:
@@ -52,6 +62,23 @@ def matrix_fingerprint(band) -> str:
     h.update(str((a.shape, a.dtype.str)).encode())
     h.update(a.tobytes())
     return h.hexdigest()
+
+
+def band_dominance(band) -> float:
+    """Host-side degree of diagonal dominance (paper Eq. 2.11).
+
+    The numpy twin of :func:`repro.core.banded.diag_dominance_factor`:
+    ``min_i |a_ii| / sum_{j!=i} |a_ij|`` with zero-off-diagonal rows
+    dropping out of the minimum.  Runs on the submit path (no device
+    round trip) to route requests to a dominance class before any
+    factorization happens.
+    """
+    a = np.abs(np.asarray(band, dtype=np.float64))
+    k = (a.shape[1] - 1) // 2
+    diag = a[:, k]
+    off = a.sum(axis=1) - diag
+    ratio = np.where(off > 0, diag / np.where(off > 0, off, 1.0), np.inf)
+    return float(ratio.min()) if ratio.size else float("inf")
 
 
 @dataclasses.dataclass
@@ -79,12 +106,26 @@ class SolveOutcome:
     converged: bool
     cache_hit: bool
     bucket: Tuple[int, int, int]
+    variant: str = ""  # SPIKE variant the batch actually solved with
+
+
+def _opts_sig(opts: SaPOptions) -> tuple:
+    """The option fields a cached factorization pytree depends on.
+
+    Part of the LRU key: two factorizations of the same matrix under
+    different variants (or precond dtypes, partition counts...) have
+    different pytree structures and must never stack into one batch, so
+    they live under distinct cache entries.
+    """
+    return (opts.p, opts.variant, opts.reduced_solver,
+            opts.precond_dtype, opts.boost_eps)
 
 
 class SolverEngine:
     """Shape-bucketed, factorization-caching batched solve server.
 
-    opts       : solver options shared by every request (p, variant, tol..)
+    opts       : default solver options (p, variant, tol...); per-call
+                 overrides ride :meth:`solve_prepared`
     max_batch  : per-step batch-size cap (one bucket per step)
     cache_size : LRU capacity in cached factorizations
     rounding   : bucket rounding policy ("pow2" | "exact")
@@ -103,8 +144,12 @@ class SolverEngine:
         self.rounding = rounding
         self.queue: Deque[SolveRequest] = deque()
         self._next_rid = 0
-        # (fingerprint, bucket) -> single-system SaPFactorization slice
+        # (fingerprint, bucket, opts-sig) -> single-system factorization
         self._cache: OrderedDict = OrderedDict()
+        # _lock guards cache + stats + opts (short critical sections);
+        # _qlock guards the pending queue.  Device solves hold neither.
+        self._lock = threading.RLock()
+        self._qlock = threading.Lock()
         self.stats = {
             "submitted": 0,
             "solved": 0,
@@ -119,37 +164,51 @@ class SolverEngine:
     # -- submission ---------------------------------------------------------
 
     def submit(self, req: SolveRequest) -> int:
-        if req.fingerprint is None:
+        if req.fingerprint is None:  # hash outside any lock (the slow part)
             req.fingerprint = matrix_fingerprint(req.band)
-        self.queue.append(req)
-        self.stats["submitted"] += 1
+        with self._qlock:
+            self.queue.append(req)
+        self._bump("submitted")
         return req.rid
 
     def submit_system(self, band, b) -> int:
         """Convenience wrapper: wrap (band, b) in a request, return its rid."""
-        rid = self._next_rid
-        self._next_rid += 1
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
         self.submit(SolveRequest(rid=rid, band=band, b=b))
         return rid
+
+    @property
+    def pending(self) -> int:
+        with self._qlock:
+            return len(self.queue)
 
     # -- cache --------------------------------------------------------------
 
     def _cache_get(self, key):
-        hit = self._cache.get(key)
-        if hit is not None:
-            self._cache.move_to_end(key)
-        return hit
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None:
+                self._cache.move_to_end(key)
+            return hit
 
     def _cache_put(self, key, value):
-        self._cache[key] = value
-        self._cache.move_to_end(key)
-        while len(self._cache) > self.cache_size:
-            self._cache.popitem(last=False)
-            self.stats["evictions"] += 1
+        with self._lock:
+            self._cache[key] = value
+            self._cache.move_to_end(key)
+            while len(self._cache) > self.cache_size:
+                self._cache.popitem(last=False)
+                self.stats["evictions"] += 1
+
+    def _bump(self, key: str, n: float = 1) -> None:
+        with self._lock:
+            self.stats[key] += n
 
     @property
     def cached_factorizations(self) -> int:
-        return len(self._cache)
+        with self._lock:
+            return len(self._cache)
 
     # -- the engine tick ----------------------------------------------------
 
@@ -160,21 +219,70 @@ class SolverEngine:
         best amortization), factors its cache misses in one vmapped pass,
         then runs one batched solve.  Returns the completed requests.
         """
-        if not self.queue:
+        with self._qlock:
+            if not self.queue:
+                return []
+            shapes = [
+                (np.shape(r.band)[0], (np.shape(r.band)[1] - 1) // 2)
+                for r in self.queue
+            ]
+            with self._lock:
+                p, rounding = self.opts.p, self.rounding
+            buckets = batched.bucket_by_shape(shapes, p, rounding)
+            bucket, idxs = max(buckets.items(), key=lambda kv: len(kv[1]))
+            idxs = set(idxs[: self.max_batch])
+            batch = [r for i, r in enumerate(self.queue) if i in idxs]
+            self.queue = deque(
+                r for i, r in enumerate(self.queue) if i not in idxs
+            )
+        return self.solve_prepared(batch, bucket)
+
+    def solve_prepared(
+        self,
+        batch: Sequence[SolveRequest],
+        bucket: Tuple[int, int, int],
+        opts: Optional[SaPOptions] = None,
+    ) -> List[SolveRequest]:
+        """Solve a pre-formed bucket of requests in one batched pass.
+
+        The re-entrant core of :meth:`step`, also the entry point for the
+        async service's drain thread: ``batch`` never touches the engine's
+        own queue, so schedulers can form buckets however they like
+        (priority, deadlines, dominance class) and hand them over with a
+        per-bucket ``opts`` override.  An override must keep ``opts.p``
+        consistent with the bucket's partition count.  Safe to call
+        concurrently with ``submit``; concurrent calls serialize only on
+        the short cache/stats critical sections, not the device solve.
+        """
+        batch = list(batch)
+        if not batch:
             return []
         t0 = time.perf_counter()
-
-        shapes = [
-            (np.shape(r.band)[0], (np.shape(r.band)[1] - 1) // 2)
-            for r in self.queue
-        ]
-        buckets = batched.bucket_by_shape(shapes, self.opts.p, self.rounding)
-        bucket, idxs = max(buckets.items(), key=lambda kv: len(kv[1]))
-        idxs = set(idxs[: self.max_batch])
-        batch = [r for i, r in enumerate(self.queue) if i in idxs]
-        self.queue = deque(r for i, r in enumerate(self.queue) if i not in idxs)
-
         nb, kb, _ = bucket
+        for r in batch:
+            if r.fingerprint is None:
+                r.fingerprint = matrix_fingerprint(r.band)
+
+        internal = opts is None
+        with self._lock:
+            eff = self.opts if internal else opts
+        # "auto" resolves per batch from the worst (minimum) host-side
+        # dominance estimate, *before* the cache lookup so the resolved
+        # variant is part of the cache key.  The internal path stays
+        # sticky: the first resolution pins self.opts so every later
+        # step stacks structurally identical factorizations.
+        if eff.variant == "auto":
+            d_min = min(band_dominance(r.band) for r in batch)
+            eff = dataclasses.replace(
+                eff, variant=resolve_variant("auto", d_min)
+            )
+            if internal:
+                with self._lock:
+                    if self.opts.variant == "auto":
+                        self.opts = eff
+                    eff = self.opts
+        sig = _opts_sig(eff)
+
         # 1) factor the cache misses in ONE vmapped pass.  A batch may
         #    repeat a fingerprint (same Jacobian, many RHS requests): each
         #    distinct matrix is factored once, duplicates count as hits.
@@ -186,7 +294,7 @@ class SolverEngine:
         miss_reqs: List[SolveRequest] = []
         is_hit: List[bool] = []
         for r in batch:
-            cached = self._cache_get((r.fingerprint, bucket))
+            cached = self._cache_get((r.fingerprint, bucket, sig))
             if cached is not None:
                 step_facs[r.fingerprint] = cached
                 is_hit.append(True)
@@ -197,25 +305,15 @@ class SolverEngine:
                 miss_fps.append(r.fingerprint)
                 miss_reqs.append(r)
         if miss_reqs:
-            bpl = batched.batch_plan(
-                [r.band for r in miss_reqs], self.opts, rounding=self.rounding
-            )
-            assert (bpl.n, bpl.k) == (nb, kb), "bucketing is shape-consistent"
+            bpl = _plan_for_bucket([r.band for r in miss_reqs], bucket, eff)
             bfac = batched.batch_factor(bpl)
-            # Sticky "auto" resolution: cached and future factorizations
-            # must share one pytree structure to stack into one batch, so
-            # the first factored batch pins the resolved variant.
-            if self.opts.variant == "auto":
-                self.opts = dataclasses.replace(
-                    self.opts, variant=bfac.variant
-                )
             for j, fp in enumerate(miss_fps):
                 fac = batched.index_factorization(bfac, j)
                 step_facs[fp] = fac
-                self._cache_put((fp, bucket), fac)
-            self.stats["factored_systems"] += len(miss_reqs)
-        self.stats["cache_hits"] += sum(is_hit)
-        self.stats["cache_misses"] += len(is_hit) - sum(is_hit)
+                self._cache_put((fp, bucket, sig), fac)
+            self._bump("factored_systems", len(miss_reqs))
+        self._bump("cache_hits", sum(is_hit))
+        self._bump("cache_misses", len(is_hit) - sum(is_hit))
 
         # 2) one batched solve over cached + fresh factorizations
         facs = [step_facs[r.fingerprint] for r in batch]
@@ -237,28 +335,77 @@ class SolverEngine:
                 converged=bool(conv[i]),
                 cache_hit=is_hit[i],
                 bucket=bucket,
+                variant=eff.variant,
             )
-        self.stats["solved"] += len(batch)
-        self.stats["steps"] += 1
-        self.stats["solve_seconds"] += time.perf_counter() - t0
+        with self._lock:
+            self.stats["solved"] += len(batch)
+            self.stats["steps"] += 1
+            self.stats["solve_seconds"] += time.perf_counter() - t0
         return batch
 
-    def run_until_drained(self, max_steps: int = 10_000) -> List[SolveRequest]:
+    def run_until_drained(
+        self, max_steps: int = 10_000, on_leftover: str = "warn"
+    ) -> List[SolveRequest]:
+        """Step until the queue is empty (or ``max_steps`` ticks elapse).
+
+        Hitting the step budget with work still queued is never silent:
+        ``on_leftover="warn"`` (default) emits a RuntimeWarning carrying
+        the remaining queue depth, ``"raise"`` turns it into a
+        RuntimeError -- unfinished requests would otherwise just look
+        like missing results.
+        """
         done: List[SolveRequest] = []
         steps = 0
-        while self.queue and steps < max_steps:
+        while self.pending and steps < max_steps:
             done.extend(self.step())
             steps += 1
+        leftover = self.pending
+        if leftover:
+            msg = (
+                f"run_until_drained stopped after max_steps={max_steps} "
+                f"with {leftover} request(s) still queued"
+            )
+            if on_leftover == "raise":
+                raise RuntimeError(msg)
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return done
 
     # -- derived stats ------------------------------------------------------
 
+    def stats_snapshot(self) -> dict:
+        """Consistent copy of the stats dict (for scraping threads)."""
+        with self._lock:
+            return dict(self.stats)
+
     @property
     def cache_hit_rate(self) -> float:
-        tot = self.stats["cache_hits"] + self.stats["cache_misses"]
-        return self.stats["cache_hits"] / tot if tot else 0.0
+        with self._lock:
+            tot = self.stats["cache_hits"] + self.stats["cache_misses"]
+            return self.stats["cache_hits"] / tot if tot else 0.0
 
     @property
     def systems_per_second(self) -> float:
-        sec = self.stats["solve_seconds"]
-        return self.stats["solved"] / sec if sec > 0 else 0.0
+        with self._lock:
+            sec = self.stats["solve_seconds"]
+            return self.stats["solved"] / sec if sec > 0 else 0.0
+
+
+def _plan_for_bucket(
+    bands: Sequence, bucket: Tuple[int, int, int], opts: SaPOptions
+) -> batched.BatchedSaPPlan:
+    """Stack bands padded to an *explicit* bucket (no re-derivation).
+
+    Unlike :func:`repro.core.batched.batch_plan`, which infers one bucket
+    from the fleet + a rounding policy, the serving path already committed
+    to a bucket at scheduling time -- possibly under a different rounding
+    than the engine default (the thrash guard widens it at runtime) -- so
+    the bucket itself is authoritative here.
+    """
+    nb, kb, _ = bucket
+    stacked = jnp.stack(
+        [batched.pad_band_to(jnp.asarray(bd), nb, kb) for bd in bands]
+    )
+    orig_ns = tuple(int(np.shape(bd)[0]) for bd in bands)
+    return batched.BatchedSaPPlan(
+        bands=stacked, k=kb, n=nb, orig_ns=orig_ns, opts=opts
+    )

@@ -1,7 +1,10 @@
 """SolverEngine: bucketed batched serving with an LRU factorization cache."""
 
+import time
+
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import SaPOptions, batched
 from repro.core.banded import band_matvec, random_banded
@@ -171,6 +174,92 @@ def test_engine_step_on_empty_queue_is_noop():
     eng = _engine()
     assert eng.step() == []
     assert eng.stats["steps"] == 0
+
+
+def test_run_until_drained_warns_on_leftover_work():
+    """Regression: hitting max_steps with work still queued used to
+    return silently -- now it warns (or raises) with the queue depth."""
+    eng = _engine(max_batch=1)
+    band = _mat(100, 3, seed=0)
+    for i in range(3):
+        eng.submit_system(band, _rhs_for(band, seed=i)[1])
+    with pytest.warns(RuntimeWarning, match=r"2 request\(s\) still queued"):
+        done = eng.run_until_drained(max_steps=1)
+    assert len(done) == 1 and eng.pending == 2
+    with pytest.raises(RuntimeError, match=r"1 request\(s\) still queued"):
+        eng.run_until_drained(max_steps=1, on_leftover="raise")
+    assert eng.run_until_drained() and eng.pending == 0  # no leftover: quiet
+
+
+def test_solve_prepared_accepts_preformed_bucket():
+    """An external scheduler can hand the engine a batch + bucket + per-
+    call options without touching the internal queue."""
+    from repro.serve.solver_engine import SolveRequest as SR
+
+    eng = _engine()
+    band = _mat(150, 3, seed=0)
+    x, b = _rhs_for(band, seed=0)
+    reqs = [SR(rid=0, band=band, b=b)]
+    bucket = batched.bucket_shape(150, 3, 4, "pow2")
+    opts = SaPOptions(p=4, variant="C", tol=1e-6, maxiter=300)
+    done = eng.solve_prepared(reqs, bucket, opts=opts)
+    assert len(done) == 1 and done[0].result.converged
+    assert done[0].result.variant == "C"
+    assert done[0].result.bucket == bucket
+    err = np.linalg.norm(done[0].result.x - x) / np.linalg.norm(x)
+    assert err < 1e-3
+    assert eng.pending == 0 and eng.stats["solved"] == 1
+    assert eng.solve_prepared([], bucket) == []
+
+
+def test_cache_keys_include_options_signature():
+    """The same matrix under different variants must occupy distinct
+    cache entries (different pytree structures cannot stack)."""
+    from repro.serve.solver_engine import SolveRequest as SR
+
+    eng = _engine(cache_size=8)
+    band = _mat(150, 3, seed=0)
+    _, b = _rhs_for(band, seed=0)
+    bucket = batched.bucket_shape(150, 3, 4, "pow2")
+    for variant in ("C", "E"):
+        opts = SaPOptions(p=4, variant=variant, tol=1e-6, maxiter=300)
+        (done,) = eng.solve_prepared([SR(rid=0, band=band, b=b)], bucket,
+                                     opts=opts)
+        assert done.result.converged and done.result.variant == variant
+    assert eng.cached_factorizations == 2
+    assert eng.stats["cache_misses"] == 2  # no cross-variant false hit
+
+
+def test_engine_concurrent_submit_and_step_thread_safe():
+    """Client threads submitting while another thread steps: no request
+    is lost, every result converges, counters stay consistent."""
+    import threading
+
+    eng = _engine(max_batch=4)
+    mats = [_mat(100 + 10 * (i % 3), 3, seed=i % 4) for i in range(12)]
+    # pre-warm the jit caches so the stepping loop below is fast
+    x0, b0 = _rhs_for(mats[0], seed=0)
+    eng.submit_system(mats[0], b0)
+    eng.run_until_drained()
+
+    def client(tid):
+        rng = np.random.default_rng(tid)
+        for i in range(4):
+            band = mats[(tid * 4 + i) % len(mats)]
+            eng.submit_system(band, rng.normal(size=band.shape[0]))
+
+    threads = [threading.Thread(target=client, args=(t,)) for t in range(3)]
+    for t in threads:
+        t.start()
+    done = []
+    deadline = time.monotonic() + 120
+    while len(done) < 12 and time.monotonic() < deadline:
+        done.extend(eng.step())
+    for t in threads:
+        t.join(timeout=60)
+    assert len(done) == 12
+    assert all(r.result.converged for r in done)
+    assert eng.stats["solved"] == 13 and eng.pending == 0
 
 
 def test_submit_precomputed_fingerprint_respected():
