@@ -40,7 +40,7 @@ from repro.core import (  # noqa: E402
 from repro.core.banded import band_matvec, random_banded  # noqa: E402
 from repro.serve import SolverEngine  # noqa: E402
 
-from benchmarks.common import Report, timeit  # noqa: E402
+from benchmarks.common import Report, repo_root_default, timeit  # noqa: E402
 
 
 def _fleet(s, n, k, d=1.0, seed=0):
@@ -83,13 +83,15 @@ def bench_fleet(report: Report, smoke: bool = False):
         bfac = batch_factor(batch_plan(bands, opts))
         res = bfac.solve_batch(bmat)
         err = float(np.abs(np.asarray(res.x)[:, :n] - xs).max())
+        true_res = float(np.asarray(res.true_resnorm).max())
         report.add(f"fleet/loop_S={s}", us_loop, "replan+refactor per system")
         report.add(
             f"fleet/batched_S={s}",
             us_batched,
             f"speedup={us_loop / us_batched:.1f}x;"
             f"per_system_us={us_batched / s:.1f};maxerr={err:.1e};"
-            f"conv={bool(np.asarray(res.converged).all())}",
+            f"conv={bool(np.asarray(res.converged).all())};"
+            f"true_res={true_res:.3e};tol={opts.tol:g}",
         )
 
 
@@ -111,13 +113,15 @@ def bench_engine(report: Report, smoke: bool = False):
     done = eng.run_until_drained()
     wall = time.perf_counter() - t0
     conv = all(r.result.converged for r in done)
+    true_res = max(r.result.true_resnorm for r in done)
     report.add(
         "engine/fleet",
         wall * 1e6 / max(len(done), 1),
         f"solved={len(done)};hit_rate={eng.cache_hit_rate:.2f};"
         f"factored={eng.stats['factored_systems']};"
         f"steps={eng.stats['steps']};sys_per_s={len(done) / wall:.1f};"
-        f"conv={conv}",
+        f"conv={conv};true_res={true_res:.3e};tol={opts.tol:g};"
+        f"misconverged={eng.stats['misconverged']}",
     )
 
 
@@ -130,8 +134,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes / small batches (CI smoke job)")
-    ap.add_argument("--out", default=".",
-                    help="directory for BENCH_batched.json")
+    ap.add_argument("--out", default=str(repo_root_default()),
+                    help="directory for BENCH_batched.json "
+                         "(default: the repo root)")
     args = ap.parse_args(argv)
     report = Report("batched")
     print("name,us_per_call,derived", flush=True)

@@ -38,7 +38,7 @@ from repro.core import SaPOptions  # noqa: E402
 from repro.core.banded import random_banded  # noqa: E402
 from repro.serve import AsyncSolverService, SolverEngine  # noqa: E402
 
-from benchmarks.common import Report  # noqa: E402
+from benchmarks.common import Report, repo_root_default  # noqa: E402
 
 
 def _workload(smoke: bool):
@@ -74,7 +74,8 @@ def _run_sequential(reqs):
         done.extend(eng.run_until_drained())
     wall = time.perf_counter() - t0
     assert all(r.result.converged for r in done)
-    return wall, len(done), eng
+    true_res = max(r.result.true_resnorm for r in done)
+    return wall, len(done), eng, true_res
 
 
 def _run_async(reqs, clients, deadline_s=120.0):
@@ -101,8 +102,9 @@ def _run_async(reqs, clients, deadline_s=120.0):
     outs = [f.result(timeout=600) for futs in futs_by_client for f in futs]
     wall = time.perf_counter() - t0
     assert all(o.converged for o in outs)
+    true_res = max(o.true_resnorm for o in outs)
     svc.close()
-    return wall, len(outs), svc
+    return wall, len(outs), svc, true_res
 
 
 def run(report: Report, smoke: bool = False) -> dict:
@@ -115,19 +117,22 @@ def run(report: Report, smoke: bool = False) -> dict:
         warm.submit_system(band, b)
     warm.run_until_drained()
 
-    wall_seq, n_seq, eng = _run_sequential(reqs)
+    tol = _opts().tol
+    wall_seq, n_seq, eng, tr_seq = _run_sequential(reqs)
     sps_seq = n_seq / wall_seq
     report.add(
         "serve/sequential",
         wall_seq * 1e6 / n_seq,
         f"solved={n_seq};sys_per_s={sps_seq:.1f};"
-        f"hit_rate={eng.cache_hit_rate:.2f};steps={eng.stats['steps']}",
+        f"hit_rate={eng.cache_hit_rate:.2f};steps={eng.stats['steps']};"
+        f"conv=True;true_res={tr_seq:.3e};tol={tol:g}",
     )
 
-    wall_async, n_async, svc = _run_async(reqs, clients)
+    wall_async, n_async, svc, tr_async = _run_async(reqs, clients)
     snap = svc.snapshot()
     sps_async = n_async / wall_async
     misses = int(snap["counters"].get("deadline_misses", 0))
+    misconv = int(snap["counters"].get("misconverged_total", 0))
     occ = snap["histograms"]["batch_occupancy"]
     report.add(
         "serve/async",
@@ -137,7 +142,9 @@ def run(report: Report, smoke: bool = False) -> dict:
         f"deadline_misses={misses};clients={clients};"
         f"hit_rate={snap['derived']['cache_hit_rate']:.2f};"
         f"occupancy_mean={occ['mean']:.2f};"
-        f"queue_p90={snap['histograms']['queue_depth']['p90']:.0f}",
+        f"queue_p90={snap['histograms']['queue_depth']['p90']:.0f};"
+        f"conv=True;true_res={tr_async:.3e};tol={tol:g};"
+        f"misconverged={misconv}",
     )
     return {
         "smoke": smoke,
@@ -145,6 +152,7 @@ def run(report: Report, smoke: bool = False) -> dict:
         "requests": len(reqs),
         "speedup": round(sps_async / sps_seq, 3),
         "deadline_misses": misses,
+        "misconverged_total": misconv,
         "async_metrics": snap,
     }
 
@@ -153,8 +161,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes / few steps (CI smoke job)")
-    ap.add_argument("--out", default=".",
-                    help="directory for BENCH_serve.json")
+    ap.add_argument("--out", default=str(repo_root_default()),
+                    help="directory for BENCH_serve.json "
+                         "(default: the repo root)")
     args = ap.parse_args(argv)
     report = Report("serve")
     print("name,us_per_call,derived", flush=True)

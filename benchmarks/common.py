@@ -48,7 +48,15 @@ class Report:
         print(row, flush=True)
 
     def write_json(self, path, meta: dict | None = None) -> Path:
-        """Serialize the collected rows as a BENCH_*.json trajectory file."""
+        """Serialize the collected rows as a BENCH_*.json trajectory file.
+
+        Refuses to write (raises :class:`MisconvergedBench`) when any row
+        claims convergence with a true residual above ``10 * tol`` -- a
+        benchmark that publishes a converged-but-wrong solve is worse
+        than no benchmark, and this check is what makes the CI
+        bench-smoke job fail on a misconvergence regression.
+        """
+        check_rows(self.records)
         path = Path(path)
         doc = {
             "bench": self.name or path.stem,
@@ -67,6 +75,37 @@ class Report:
         path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
         print(f"wrote {path}", flush=True)
         return path
+
+
+class MisconvergedBench(RuntimeError):
+    """A benchmark row reported converged=True with true_res > 10 * tol."""
+
+
+def check_rows(records) -> None:
+    """Reject rows that claim convergence while the true residual fails.
+
+    ``conv`` parses to the string ``"True"``/``"False"`` (not a float);
+    ``true_res`` and ``tol`` are numeric when present.  Rows that do not
+    carry all three fields are left alone.
+    """
+    for rec in records:
+        d = rec.get("derived", {})
+        conv, true_res, tol = d.get("conv"), d.get("true_res"), d.get("tol")
+        if conv not in ("True", True):
+            continue
+        if not isinstance(true_res, float) or not isinstance(tol, float):
+            continue
+        if true_res > 10.0 * tol:
+            raise MisconvergedBench(
+                f"row {rec['name']!r}: converged=True but "
+                f"true_res={true_res:g} > 10 * tol={tol:g}"
+            )
+
+
+def repo_root_default() -> Path:
+    """Default --out directory: the repository root, so the committed
+    BENCH_*.json trajectory files land where the ROADMAP expects them."""
+    return Path(__file__).resolve().parent.parent
 
 
 def _parse_derived(derived: str) -> dict:

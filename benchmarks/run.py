@@ -12,13 +12,14 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from benchmarks.common import Report  # noqa: E402
+from benchmarks.common import Report, repo_root_default  # noqa: E402
 
 
 def main() -> None:
     import jax
 
     report = Report()
+    out = repo_root_default()  # committed trajectory files live at the root
     print("name,us_per_call,derived", flush=True)
 
     # bench_solver and bench_batched track the cross-PR perf trajectory:
@@ -27,21 +28,21 @@ def main() -> None:
 
     solver_report = Report("solver")
     bench_solver.run(solver_report)
-    solver_report.write_json("BENCH_solver.json")
+    solver_report.write_json(out / "BENCH_solver.json")
     jax.clear_caches()
 
     from benchmarks import bench_batched  # noqa: E402
 
     batched_report = Report("batched")
     bench_batched.run(batched_report)
-    batched_report.write_json("BENCH_batched.json")
+    batched_report.write_json(out / "BENCH_batched.json")
     jax.clear_caches()
 
     from benchmarks import bench_serve  # noqa: E402
 
     serve_report = Report("serve")
     bench_serve.run(serve_report)
-    serve_report.write_json("BENCH_serve.json")
+    serve_report.write_json(out / "BENCH_serve.json")
     jax.clear_caches()
 
     from benchmarks import bench_reorder  # noqa: E402

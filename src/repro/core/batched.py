@@ -20,11 +20,23 @@ Two layers live here:
 2. **Bucketing** -- heterogeneous fleets cannot share a compiled shape.
    :func:`bucket_shape` / :func:`bucket_by_shape` round each system's
    ``(N, K)`` up to a shared bucket (power-of-two rounding by default) and
-   :func:`pad_band_to` embeds a system *exactly* into the bucket shape:
-   identity rows with zero RHS below, zero band columns on the sides.
-   Padded rows decouple completely, so the bucketized solve agrees with
-   the unpadded solve on the original rows to iteration tolerance -- no
-   approximation is introduced (see ``tests/test_batched.py``).
+   :func:`pad_band_to` embeds a system *exactly* into the bucket shape.
+
+   The N axis pads with decoupled identity rows.  The K axis is the
+   subtle one: zero side columns are *algebraically* exact but
+   *structurally* singular -- a K' > K band whose outer diagonals are
+   exactly zero has strictly-triangular coupling blocks, so the K'-blocked
+   pivots of the block LU become ill-conditioned and the "exact" variant E
+   preconditioner silently loses digits (the converged-but-wrong failure
+   of ROADMAP/PR 6).  When K widens, :func:`pad_band_to` therefore
+   *interleaves* identity rows instead: every K original rows are followed
+   by K' - K identity slots, which makes the padded matrix a symmetric
+   permutation of ``blkdiag(A, I)`` whose K'-blocked pivots are exactly
+   ``(original KxK pivot) (+) I`` -- same conditioning as the unpadded
+   factorization, bit-for-bit.  The row permutation
+   (:func:`pad_permutation`) rides the factorization's ``b_perm`` /
+   ``x_perm`` slots, so callers keep the contiguous contract: RHS in as
+   ``[b; 0]``, solution out as ``[x; 0]``.
 
 The per-system factorizations inside a batch are slicable
 (:func:`index_factorization`) and re-stackable
@@ -69,6 +81,19 @@ def _next_pow2(x: int) -> int:
     return 1 << max(x - 1, 0).bit_length()
 
 
+def interleaved_rows(n: int, k: int, k_pad: int) -> int:
+    """Rows the structurally exact K-widened embedding needs.
+
+    Widening K to K' > K interleaves K' - K identity rows after every K
+    original rows (see :func:`pad_band_to`), so N grows to
+    ``ceil(N / K) * K'``.  No widening (or K = 0, where there are no
+    couplings to keep well-conditioned) needs no extra rows.
+    """
+    if k <= 0 or k_pad <= k:
+        return n
+    return -(-n // k) * k_pad
+
+
 def bucket_shape(
     n: int, k: int, p: int, rounding: str = "pow2"
 ) -> Tuple[int, int, int]:
@@ -78,15 +103,21 @@ def bucket_shape(
     logarithmic in the size spread (at most ~2x padding waste);
     ``"exact"`` buckets only identical shapes together.  ``K'`` is never
     rounded below 2 so degenerate K=0/1 systems still form K x K blocks.
+    When ``K' > K`` the bucket's ``N'`` also covers the interleaved
+    identity-row embedding (:func:`interleaved_rows`) so the K-widening
+    stays structurally exact.
     """
     if rounding == "pow2":
         kb = max(_next_pow2(k), 2)
-        nb = max(_next_pow2(n), p * kb)
     elif rounding == "exact":
         kb = max(k, 2)
-        nb = max(n, p * kb)
     else:
         raise ValueError(f"unknown bucket rounding {rounding!r}")
+    n_eff = interleaved_rows(n, k, kb)
+    if rounding == "pow2":
+        nb = max(_next_pow2(n_eff), p * kb)
+    else:
+        nb = max(n_eff, p * kb)
     # block-tridiag partitioning pads to P * M * K' anyway; absorb that
     # padding into the bucket so the bucket key IS the compiled shape.
     nb = _round_up(nb, p * kb)
@@ -108,14 +139,86 @@ def bucket_by_shape(
     return buckets
 
 
+def _pad_positions(n: int, k: int, k_pad: int) -> np.ndarray:
+    """Interleaved position of original row t: chunk ``t // k`` of K rows
+    starts at ``(t // k) * K'`` in the padded frame."""
+    t = np.arange(n)
+    return (t // k) * k_pad + (t % k)
+
+
+def pad_permutation(
+    n: int, k: int, n_pad: int, k_pad: int
+) -> Optional[np.ndarray]:
+    """Contiguous -> padded row map of the bucket embedding, or None.
+
+    Returns ``perm`` (int32, length N') such that for a padded-frame
+    vector ``v``, ``v[perm]`` is the contiguous-frame vector: original
+    row ``t < N`` lives at padded row ``perm[t]``, identity pad slots
+    occupy ``perm[N:]``.  None when the embedding is contiguous (no
+    K-widening, K = 0, or not enough rows to interleave), i.e. original
+    rows simply occupy the first N slots.
+    """
+    if k <= 0 or k_pad <= k or interleaved_rows(n, k, k_pad) > n_pad:
+        return None
+    pos = _pad_positions(n, k, k_pad)
+    pad_slots = np.setdiff1d(np.arange(n_pad), pos)
+    return np.concatenate([pos, pad_slots]).astype(np.int32)
+
+
+def _pad_band_interleaved(
+    band: jax.Array, n_pad: int, k_pad: int
+) -> jax.Array:
+    """K-widening embedding that preserves block conditioning exactly.
+
+    Insert ``K' - K`` identity rows after every K original rows.  The
+    resulting (N', 2K'+1) band is a symmetric permutation of
+    ``blkdiag(A, I)``: every K'xK' partition block of the block-tridiag
+    factorization is (an original KxK block) (+) (an identity slot), so
+    pivots, spikes, and the reduced interface system have *identical*
+    conditioning to the unpadded factorization -- unlike zero side
+    columns, which make the widened coupling blocks strictly triangular
+    (structurally singular) and poison the f32 block-pivot inverses.
+    """
+    band = jnp.asarray(band)
+    n, w = band.shape
+    k = (w - 1) // 2
+    pos = _pad_positions(n, k, k_pad)
+    t = np.arange(n)
+    rows, cols, src_t, src_j = [], [], [], []
+    for j in range(w):
+        c = t + (j - k)
+        valid = (c >= 0) & (c < n)
+        tv = t[valid]
+        # |pos[c] - pos[t]| <= K' for |c - t| <= K: same or adjacent chunk
+        off = pos[c[valid]] - pos[tv]
+        rows.append(pos[tv])
+        cols.append(k_pad + off)
+        src_t.append(tv)
+        src_j.append(np.full(tv.shape, j))
+    out = jnp.zeros((n_pad, 2 * k_pad + 1), band.dtype)
+    out = out.at[:, k_pad].set(1.0)  # identity everywhere ...
+    return out.at[np.concatenate(rows), np.concatenate(cols)].set(
+        band[np.concatenate(src_t), np.concatenate(src_j)]
+    )  # ... original entries overwrite their slots (targets are unique)
+
+
 def pad_band_to(band: jax.Array, n_pad: int, k_pad: int) -> jax.Array:
     """Embed an (N, 2K+1) band exactly into bucket shape (N', 2K'+1).
 
-    Width: zero columns on both sides (the added diagonals are empty).
-    Rows: identity rows below (decoupled 1 * x = 0 equations).  The
-    padded system's solution restricted to the first N rows equals the
-    original solution exactly -- band storage has no out-of-range
-    entries, so original rows never reference padded columns.
+    When K widens (``K' > K > 0``) and the bucket has room
+    (``interleaved_rows(N, K, K') <= N'``, guaranteed for buckets from
+    :func:`bucket_shape`), the embedding interleaves identity rows so the
+    padded matrix is a symmetric permutation of ``blkdiag(A, I)`` --
+    structurally exact, same conditioning as unpadded (see
+    :func:`_pad_band_interleaved`); recover the row order with
+    :func:`pad_permutation` (``batch_factor`` wires it into the
+    factorization's ``b_perm`` / ``x_perm`` automatically).
+
+    Otherwise the embedding is contiguous: zero side columns for the
+    added diagonals, identity rows appended below.  That form is
+    algebraically exact too, but a widened K leaves structurally singular
+    coupling blocks whose boosted pivots degrade the preconditioner --
+    only acceptable when K does not widen.
     """
     band = jnp.asarray(band)
     n, w = band.shape
@@ -125,6 +228,8 @@ def pad_band_to(band: jax.Array, n_pad: int, k_pad: int) -> jax.Array:
             f"bucket shape (N'={n_pad}, K'={k_pad}) smaller than system "
             f"(N={n}, K={k})"
         )
+    if pad_permutation(n, k, n_pad, k_pad) is not None:
+        return _pad_band_interleaved(band, n_pad, k_pad)
     if k_pad != k:
         side = jnp.zeros((n, k_pad - k), band.dtype)
         band = jnp.concatenate([side, band, side], axis=1)
@@ -133,6 +238,31 @@ def pad_band_to(band: jax.Array, n_pad: int, k_pad: int) -> jax.Array:
         rows = rows.at[:, k_pad].set(1.0)
         band = jnp.concatenate([band, rows], axis=0)
     return band
+
+
+def band_effective_k(band) -> int:
+    """True half-bandwidth: stored K minus exactly-zero outer diagonals.
+
+    A band *stored* wider than its couplings (e.g. a K=3 matrix in K=4
+    storage) reproduces the structurally-singular zero-diagonal problem
+    no matter how it is bucketed; trimming to the effective K first
+    (:func:`trim_band_to_effective`) restores the exact embedding.  Host-
+    side (numpy) -- used on the serving escalation path.
+    """
+    a = np.asarray(band)
+    k = (a.shape[1] - 1) // 2
+    ke = k
+    while ke > 0 and not (np.any(a[:, k - ke]) or np.any(a[:, k + ke])):
+        ke -= 1
+    return ke
+
+
+def trim_band_to_effective(band) -> np.ndarray:
+    """Drop exactly-zero outer diagonal pairs from band storage."""
+    a = np.asarray(band)
+    k = (a.shape[1] - 1) // 2
+    ke = band_effective_k(a)
+    return a if ke == k else a[:, k - ke: k + ke + 1]
 
 
 def pad_rhs_to(b: jax.Array, n_pad: int) -> jax.Array:
@@ -156,6 +286,8 @@ class BatchedSaPPlan:
     bands   : (S, N', 2K'+1) stacked (padded) band storage
     k, n    : bucket half-bandwidth K' and size N'
     orig_ns : per-system original sizes (for un-padding results)
+    orig_ks : per-system original half-bandwidths (for the interleaved
+              K-widening permutations; empty = assume no widening)
     opts    : solver options shared by the whole batch
     """
 
@@ -164,6 +296,7 @@ class BatchedSaPPlan:
     n: int
     orig_ns: Tuple[int, ...]
     opts: SaPOptions
+    orig_ks: Tuple[int, ...] = ()
 
     @property
     def s(self) -> int:
@@ -194,7 +327,8 @@ def batch_plan(
         if (nb, kb) != (n, k):
             stacked = jnp.stack([pad_band_to(bd, nb, kb) for bd in stacked])
         return BatchedSaPPlan(
-            bands=stacked, k=kb, n=nb, orig_ns=orig_ns, opts=opts
+            bands=stacked, k=kb, n=nb, orig_ns=orig_ns, opts=opts,
+            orig_ks=(k,) * s,
         )
 
     bands = [jnp.asarray(bd) for bd in bands]
@@ -203,6 +337,14 @@ def batch_plan(
     shapes = [(bd.shape[0], (bd.shape[1] - 1) // 2) for bd in bands]
     nb = max(bucket_shape(n, k, opts.p, rounding)[0] for n, k in shapes)
     kb = max(bucket_shape(n, k, opts.p, rounding)[1] for n, k in shapes)
+    # the fleet bucket's K' may exceed a member's own bucket K', widening
+    # its interleaved embedding beyond its own N' -- grow N' to cover the
+    # worst member so every embedding stays structurally exact.
+    need = max(interleaved_rows(n, k, kb) for n, k in shapes)
+    if rounding == "pow2":
+        nb = max(nb, _next_pow2(need))
+    else:
+        nb = max(nb, need)
     nb = _round_up(nb, opts.p * kb)  # one bucket for the whole fleet
     stacked = jnp.stack([pad_band_to(bd, nb, kb) for bd in bands])
     return BatchedSaPPlan(
@@ -211,6 +353,7 @@ def batch_plan(
         n=nb,
         orig_ns=tuple(n for n, _ in shapes),
         opts=opts,
+        orig_ks=tuple(k for _, k in shapes),
     )
 
 
@@ -281,7 +424,8 @@ def _solve_batch(fac: SaPFactorization, b: jax.Array) -> SaPSolveResult:
 @jax.jit
 def _solve_batch_many(fac: SaPFactorization, b: jax.Array) -> SaPSolveResult:
     inner_axes = SaPSolveResult(
-        x=1, iterations=0, resnorm=0, converged=0, d_factor=None
+        x=1, iterations=0, resnorm=0, converged=0, true_resnorm=0,
+        d_factor=None,
     )
 
     def one_system(f, bm):
@@ -324,6 +468,30 @@ def _factor_stages_fn(k: int, p: int, variant: str, opts_key: tuple):
     return jax.jit(jax.vmap(stages))
 
 
+def _stacked_permutations(bpl: BatchedSaPPlan):
+    """Per-system contiguous<->padded row maps as stacked (S, N') leaves.
+
+    ``x_perm[i]`` gathers system i's padded-frame solution back to the
+    contiguous frame; ``b_perm[i]`` (its inverse) scatters the contiguous
+    ``[b; 0]`` RHS into the interleaved frame.  Always materialized --
+    identity rows for members that need no interleaving -- so every
+    factorization of a bucket shares one pytree structure and the serving
+    cache can stack factorizations coming from different plans.
+    """
+    orig_ks = bpl.orig_ks or (bpl.k,) * bpl.s
+    ident = np.arange(bpl.n, dtype=np.int32)
+    xs, bs = [], []
+    for n, k in zip(bpl.orig_ns, orig_ks):
+        perm = pad_permutation(n, k, bpl.n, bpl.k)
+        if perm is None:
+            xs.append(ident)
+            bs.append(ident)
+        else:
+            xs.append(perm)
+            bs.append(np.argsort(perm).astype(np.int32))
+    return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(bs))
+
+
 def batch_factor(bpl: BatchedSaPPlan) -> BatchedSaPFactorization:
     """Factor every system in the batch in one vmapped device pass.
 
@@ -340,11 +508,12 @@ def batch_factor(bpl: BatchedSaPPlan) -> BatchedSaPFactorization:
         variant = resolve_variant("auto", float(jnp.min(d_all)))
     stages = _factor_stages_fn(bpl.k, opts.p, variant, _factor_key(opts))
     pcs, d_factors = stages(bpl.bands)
+    x_perm, b_perm = _stacked_permutations(bpl)
     fac = SaPFactorization(
         op=BandedOperator(band=bpl.bands, n=bpl.n, k=bpl.k),
         pc=pcs,
-        b_perm=None,
-        x_perm=None,
+        b_perm=b_perm,
+        x_perm=x_perm,
         n=bpl.n,
         k=bpl.k,
         tol=opts.tol,

@@ -17,6 +17,14 @@ Pivoting is replaced by *pivot boosting* (paper Sec. 2.2, following
 PARDISO): inside the Gauss-Jordan inversion of each S_j, any pivot smaller
 than ``boost_eps * max|S_j|`` is boosted to that threshold.
 
+*Structurally* zero rows are exempt from boosting: a row of S_j that is
+exactly zero cannot come from rounding -- it is a decoupled slot (identity
+padding from shape bucketing, or a band stored wider than its true
+bandwidth).  Boosting such a pivot to ``thr`` injects a ``1/thr`` row into
+the inverse and poisons every Schur complement downstream; instead the
+pivot is treated as exactly 1, so the inverse restricted to those slots is
+the identity -- the blkdiag(A, I) semantics the padded embeddings rely on.
+
 The Pallas kernels in ``repro.kernels`` implement exactly these recurrences;
 this module doubles as their oracle (re-exported by ``kernels/ref.py``).
 """
@@ -38,7 +46,15 @@ DEFAULT_BOOST = 1e-10
 
 
 def gj_inverse(a: jax.Array, boost_eps: float = DEFAULT_BOOST) -> jax.Array:
-    """Inverse of a (K, K) block via Gauss-Jordan with pivot boosting."""
+    """Inverse of a (K, K) block via Gauss-Jordan with pivot boosting.
+
+    Rows of ``a`` that are *exactly* zero (structurally decoupled slots,
+    e.g. identity padding) are never boosted: their pivot is taken as 1,
+    so the returned inverse acts as the identity on those slots instead of
+    a ``1/thr``-sized perturbation.  Elimination never fills a zero row
+    (its multiplier column entry is zero), so the test at step ``t`` sees
+    the original structure of row ``t``.
+    """
     k = a.shape[-1]
     dtype = a.dtype
     scale = jnp.maximum(jnp.max(jnp.abs(a)), jnp.asarray(1e-30, dtype))
@@ -47,9 +63,11 @@ def gj_inverse(a: jax.Array, boost_eps: float = DEFAULT_BOOST) -> jax.Array:
     def step(t, aug):
         piv = aug[t, t]
         thr = boost_eps * scale
+        struct_zero = jnp.all(aug[t, :k] == 0)
         piv = jnp.where(
             jnp.abs(piv) < thr, jnp.where(piv >= 0, thr, -thr), piv
         )
+        piv = jnp.where(struct_zero, jnp.asarray(1.0, dtype), piv)
         # normalize pivot row; treat aug[t, t] as the (possibly boosted) piv,
         # i.e. we factor the perturbed block A + dA (paper Sec. 2.2)
         row = (aug[t] / piv).at[t].set(1.0)

@@ -477,6 +477,7 @@ def solve_step_fn(dsap: DistSaP, tol: float = 1e-8, maxiter: int = 200):
             iterations=res.iterations,
             resnorm=res.resnorm,
             converged=res.converged,
+            true_resnorm=res.true_resnorm,
             d_factor=None if d_factor is None else jnp.asarray(d_factor),
         )
 

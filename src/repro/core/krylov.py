@@ -35,10 +35,29 @@ MatVec = Union[Callable[[jax.Array], jax.Array], LinearOperator]
 
 
 class KrylovResult(NamedTuple):
+    """Solver exit state.
+
+    ``converged``/``resnorm`` report the *preconditioned* residual the
+    iteration actually controls (``M^-1 (b - A x)`` under left
+    preconditioning): that is what ``tol`` bounds, and a strong but
+    *inexact* preconditioner can meet it while ``b - A x`` is still
+    large.  ``true_resnorm`` is the unpreconditioned check
+    ``||b - A x|| / ||b||``, recomputed from scratch at exit (one extra
+    matvec) -- the quantity callers should trust.
+    """
+
     x: jax.Array
     iterations: jax.Array  # fractional iterations (quarters for BiCGStab)
     resnorm: jax.Array  # preconditioned residual norm at exit
     converged: jax.Array
+    true_resnorm: jax.Array | None = None  # ||b - A x|| / ||b||
+
+
+def _true_resnorm(matvec, b, x) -> jax.Array:
+    """Unpreconditioned relative residual, recomputed (not the recurrence)."""
+    bn = jnp.linalg.norm(b)
+    bn = jnp.where(bn > 0, bn, 1.0)
+    return jnp.linalg.norm(b - matvec(x).astype(b.dtype)) / bn
 
 
 def _identity(x):
@@ -168,7 +187,13 @@ def _bicgstab2_impl(
     )
     (x, r, _, _, _, _, it, done) = jax.lax.while_loop(cond, body, state)
     rnorm = jnp.linalg.norm(r)
-    return KrylovResult(x=x, iterations=it, resnorm=rnorm / bnorm, converged=done)
+    return KrylovResult(
+        x=x,
+        iterations=it,
+        resnorm=rnorm / bnorm,
+        converged=done,
+        true_resnorm=_true_resnorm(matvec, b, x),
+    )
 
 
 _bicgstab2_jit = jax.jit(
@@ -243,6 +268,7 @@ def _cg_impl(
         iterations=it,
         resnorm=jnp.linalg.norm(r) / bnorm,
         converged=done,
+        true_resnorm=_true_resnorm(matvec, b, x),
     )
 
 
@@ -267,7 +293,9 @@ def cg(
 
 
 def _vmap_rhs(impl, default_maxiter):
-    out_axes = KrylovResult(x=1, iterations=0, resnorm=0, converged=0)
+    out_axes = KrylovResult(
+        x=1, iterations=0, resnorm=0, converged=0, true_resnorm=0
+    )
 
     def many(
         matvec: MatVec,

@@ -71,6 +71,15 @@ class SaPOptions:
     variant: str = "C"
     tol: float = 1e-10
     maxiter: int = 500
+    # Tolerance on the *true* relative residual ||b - A x|| / ||b|| a
+    # result must meet before a ``converged`` claim is trusted: the Krylov
+    # loop controls the preconditioned residual, and an inexact
+    # preconditioner can meet ``tol`` while the true residual is large
+    # (misconvergence).  None means 10 * tol.  Consumed by the serving
+    # guard (SolverEngine / AsyncSolverService), which escalates or
+    # demotes ``converged`` when the check fails; the core solve paths
+    # always report ``true_resnorm`` so callers can apply their own check.
+    check_true_residual: Optional[float] = None
     boost_eps: float = DEFAULT_BOOST
     precond_dtype: str = "float32"
     iter_dtype: Optional[str] = None  # Krylov dtype; None = follow the RHS
@@ -96,6 +105,7 @@ class SaPSolution:
     converged: bool
     k: int  # half bandwidth used by the preconditioner
     info: dict
+    true_resnorm: float = float("nan")  # ||b - A x|| / ||b||, unpreconditioned
 
 
 class SaPSolveResult(NamedTuple):
@@ -107,12 +117,21 @@ class SaPSolveResult(NamedTuple):
     (paper Eq. 2.11, a scalar shared by all RHS) -- the quantity that
     drives the ``variant="auto"`` policy; the resolved variant itself is
     static metadata, available as ``factorization.variant``.
+
+    Residual semantics: ``converged`` / ``resnorm`` are statements about
+    the *preconditioned* residual ``M^-1 (b - A x)`` -- the quantity the
+    Krylov iteration drives below ``tol``.  ``true_resnorm`` is the
+    unpreconditioned ``||b - A x|| / ||b||`` recomputed at exit against
+    the operator actually solved; when the preconditioner is inexact
+    (e.g. a structurally-degraded padded embedding) the two can disagree,
+    and ``true_resnorm`` is the one that measures answer quality.
     """
 
     x: jax.Array
     iterations: jax.Array
     resnorm: jax.Array
     converged: jax.Array
+    true_resnorm: Optional[jax.Array] = None
     d_factor: Optional[jax.Array] = None
 
 
@@ -366,11 +385,16 @@ def _solve_impl(fac: SaPFactorization, b: jax.Array) -> SaPSolveResult:
         fac.op.matvec, b, precond=precond, tol=fac.tol, maxiter=fac.maxiter
     )
     x = res.x[fac.x_perm] if fac.x_perm is not None else res.x
+    # true_resnorm is computed in the solver frame (permuted / padded),
+    # but permutations preserve norms and exact identity-padding rows
+    # contribute a zero residual, so it equals the original-frame
+    # ||b - A x|| / ||b|| of the unpadded, unpermuted system.
     return SaPSolveResult(
         x=x,
         iterations=res.iterations,
         resnorm=res.resnorm,
         converged=res.converged,
+        true_resnorm=res.true_resnorm,
         d_factor=fac.d_factor,
     )
 
@@ -382,7 +406,8 @@ _solve_one = jax.jit(_solve_impl)
 def _solve_many(fac: SaPFactorization, bmat: jax.Array) -> SaPSolveResult:
     # d_factor is shared by all RHS (closed over, unbatched): out_axes None
     out_axes = SaPSolveResult(
-        x=1, iterations=0, resnorm=0, converged=0, d_factor=None
+        x=1, iterations=0, resnorm=0, converged=0, true_resnorm=0,
+        d_factor=None,
     )
     return jax.vmap(lambda bi: _solve_impl(fac, bi), in_axes=1, out_axes=out_axes)(
         bmat
@@ -425,6 +450,7 @@ def solve_banded(
         iterations=float(res.iterations),
         resnorm=float(res.resnorm),
         converged=bool(res.converged),
+        true_resnorm=float(res.true_resnorm),
         k=fac.k,
         info={
             "variant": fac.variant,
@@ -456,6 +482,7 @@ def solve_sparse(
         iterations=float(res.iterations),
         resnorm=float(res.resnorm),
         converged=bool(res.converged),
+        true_resnorm=float(res.true_resnorm),
         k=fac.k,
         info={
             **pl.info,

@@ -36,6 +36,13 @@ Reduced system (exact; unknowns y_i = [x_i^(b); x_{i+1}^(t)], i = 0..P-2):
 where V_i = A_i^{-1}[0;..;B_i] and W_i = A_i^{-1}[C_i;0;..] are the whole
 spikes (their top/bottom K x K blocks appear above).  Truncating the
 off-diagonal terms recovers (2.9).
+
+Every block inversion here goes through
+:func:`repro.core.block_lu.gj_inverse`, whose structural-zero exemption
+keeps identity-padded slots (shape bucketing) exactly identity: the
+coupling blocks B/C of a padded embedding are zero on padded rows, so the
+spikes -- and hence the reduced system -- of blkdiag(A, I) decouple
+exactly instead of picking up boosted ``1/thr`` perturbations.
 """
 
 from __future__ import annotations

@@ -21,6 +21,9 @@ kernel pair dispatched by ``repro.kernels.ops``):
 
 The pure-jnp oracle is ``repro.core.cyclic_reduction``; both paths build
 the identical :class:`~repro.core.cyclic_reduction.BCRFactors` pytree.
+Both inherit the structural-zero pivot exemption of
+:func:`repro.core.block_lu.gj_inverse`: exactly-zero block rows (identity
+padding) invert to identity slots instead of boosted ``1/thr`` garbage.
 """
 
 from __future__ import annotations

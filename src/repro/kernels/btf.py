@@ -17,6 +17,10 @@ pattern of the paper mapped onto the TPU memory hierarchy.
 Pivoting is replaced by pivot boosting inside the Gauss-Jordan inversion
 (paper Sec. 2.2), which keeps the kernel branch-free -- the property that
 made the original algorithm GPU-friendly makes it MXU/VPU-friendly here.
+Structurally zero pivot rows (identity padding from shape bucketing) are
+exempt from boosting and take pivot 1 instead -- see
+:func:`repro.core.block_lu.gj_inverse`, shared by kernel and oracle, so
+padded embeddings stay exactly blkdiag(A, I) in both paths.
 """
 
 from __future__ import annotations

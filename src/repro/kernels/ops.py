@@ -8,6 +8,11 @@
 The default comes from the env var ``REPRO_KERNEL_IMPL`` and falls back to
 "jnp" when no TPU is present, "pallas" otherwise, so the same model code
 runs everywhere.
+
+All three paths share :func:`repro.core.block_lu.gj_inverse` and with it
+the structural-zero pivot exemption: exactly-zero block rows (identity
+padding from shape bucketing) take pivot 1 instead of a boosted ``thr``,
+so ``boost_eps`` only ever perturbs *numerically* small pivots.
 """
 
 from __future__ import annotations

@@ -45,7 +45,11 @@ thread** forms device batches and resolves the futures.  The pieces:
 * **Metrics** -- a :class:`repro.serve.metrics.MetricsRegistry` records
   queue depth, time-in-queue, batch occupancy, cache hits/misses,
   deadline misses, and solves/sec; ``snapshot()`` is JSON-ready and
-  feeds the ``BENCH_serve.json`` trajectory row.
+  feeds the ``BENCH_serve.json`` trajectory row.  The misconvergence
+  guard is observable too: ``misconverged_total`` counts solves whose
+  iteration claimed convergence while the true residual failed the
+  guard, ``escalations`` counts the exact-bucket re-solves the engine
+  ran in response (see :class:`repro.serve.solver_engine.SolveOutcome`).
 """
 
 from __future__ import annotations
@@ -256,6 +260,11 @@ class AsyncSolverService:
         self._m_widened = m.counter("rounding_widenings")
         self._m_hits = m.counter("cache_hits")
         self._m_misses = m.counter("cache_misses")
+        # misconvergence guard: solves whose Krylov iteration claimed
+        # convergence but whose TRUE residual failed the guard, and the
+        # exact-bucket escalation re-solves the engine ran in response
+        self._m_misconverged = m.counter("misconverged_total")
+        self._m_escalations = m.counter("escalations")
         self._m_depth = m.histogram("queue_depth", depth)
         self._m_wait = m.histogram("time_in_queue_s")
         self._m_occ = m.histogram("batch_occupancy", occupancy)
@@ -464,13 +473,22 @@ class AsyncSolverService:
             return len(tickets)
         now = time.monotonic()
         hits = 0
+        mis = esc = 0
         for t, r in zip(tickets, reqs):
             hits += bool(r.result.cache_hit)
+            # an escalated outcome replaced a misconverged first pass, so
+            # it counts as a misconvergence even if the re-solve cured it
+            esc += bool(r.result.escalated)
+            mis += bool(r.result.escalated or r.result.misconverged)
             self._m_wait.observe(now - t.t_submit)
             t.future._resolve(r.result)
         self._m_solved.inc(len(tickets))
         self._m_hits.inc(hits)
         self._m_misses.inc(len(tickets) - hits)
+        if mis:
+            self._m_misconverged.inc(mis)
+        if esc:
+            self._m_escalations.inc(esc)
         self._m_occ.observe(len(tickets) / self.max_batch)
         self._check_thrash()
         return len(tickets)

@@ -98,7 +98,18 @@ class SolveRequest:
 
 @dataclasses.dataclass
 class SolveOutcome:
-    """Per-request result (device batch sliced back to the original N)."""
+    """Per-request result (device batch sliced back to the original N).
+
+    ``resnorm`` is the *preconditioned* residual the Krylov iteration
+    controlled; ``true_resnorm`` is ||b - A x|| / ||b|| against the
+    request's own operator.  ``misconverged`` marks the silent-failure
+    mode this engine guards against: the iteration reported
+    ``converged`` but the true residual exceeds the guard threshold
+    (``opts.check_true_residual``, default ``10 * tol``).  Requests that
+    went through the escalation path carry ``escalated=True``; if even
+    the escalated re-solve misconverges, ``converged`` is demoted to
+    False rather than returning a silently-wrong answer.
+    """
 
     x: np.ndarray
     iterations: float
@@ -107,6 +118,9 @@ class SolveOutcome:
     cache_hit: bool
     bucket: Tuple[int, int, int]
     variant: str = ""  # SPIKE variant the batch actually solved with
+    true_resnorm: float = float("nan")
+    misconverged: bool = False
+    escalated: bool = False
 
 
 def _opts_sig(opts: SaPOptions) -> tuple:
@@ -158,6 +172,8 @@ class SolverEngine:
             "cache_misses": 0,
             "factored_systems": 0,
             "evictions": 0,
+            "misconverged": 0,
+            "escalations": 0,
             "solve_seconds": 0.0,
         }
 
@@ -242,6 +258,7 @@ class SolverEngine:
         batch: Sequence[SolveRequest],
         bucket: Tuple[int, int, int],
         opts: Optional[SaPOptions] = None,
+        _escalated: bool = False,
     ) -> List[SolveRequest]:
         """Solve a pre-formed bucket of requests in one batched pass.
 
@@ -253,6 +270,15 @@ class SolverEngine:
         consistent with the bucket's partition count.  Safe to call
         concurrently with ``submit``; concurrent calls serialize only on
         the short cache/stats critical sections, not the device solve.
+
+        Every outcome carries the *true* residual ||b - A x|| / ||b||
+        alongside the Krylov-controlled preconditioned ``resnorm``.
+        Requests whose iteration claims convergence while the true
+        residual exceeds the guard (``opts.check_true_residual``, default
+        ``10 * tol``) are flagged misconverged and re-solved once through
+        :meth:`_escalate` with a structurally exact bucket; ``_escalated``
+        marks that inner pass (where a persistent misconvergence demotes
+        ``converged`` instead of recursing again).
         """
         batch = list(batch)
         if not batch:
@@ -327,21 +353,78 @@ class SolverEngine:
         iters = np.asarray(res.iterations)
         rnorm = np.asarray(res.resnorm)
         conv = np.asarray(res.converged)
+        if res.true_resnorm is not None:
+            tres = np.asarray(res.true_resnorm)
+        else:
+            tres = np.full(len(batch), np.nan)
+        guard = (
+            eff.check_true_residual
+            if eff.check_true_residual is not None
+            else 10.0 * eff.tol
+        )
         for i, r in enumerate(batch):
+            t = float(tres[i])
+            c = bool(conv[i])
             r.result = SolveOutcome(
                 x=xs[i],
                 iterations=float(iters[i]),
                 resnorm=float(rnorm[i]),
-                converged=bool(conv[i]),
+                converged=c,
                 cache_hit=is_hit[i],
                 bucket=bucket,
                 variant=eff.variant,
+                true_resnorm=t,
+                misconverged=bool(c and t > guard),
             )
         with self._lock:
             self.stats["solved"] += len(batch)
             self.stats["steps"] += 1
             self.stats["solve_seconds"] += time.perf_counter() - t0
+
+        mis = [r for r in batch if r.result.misconverged]
+        if mis:
+            self._bump("misconverged", len(mis))
+            if _escalated:
+                # the exact-bucket pass ALSO misconverged: never report a
+                # silently-wrong answer as success
+                for r in mis:
+                    r.result.converged = False
+            else:
+                self._escalate(mis, eff)
         return batch
+
+    def _escalate(self, reqs: List[SolveRequest], eff: SaPOptions) -> None:
+        """Re-solve misconverged requests under structurally exact buckets.
+
+        Misconvergence is, in practice, a padding artifact: a band stored
+        (or bucketed) wider than its true bandwidth makes the K-block
+        pivots ill-conditioned and the preconditioned residual lies.  The
+        escalation trims each band to its effective bandwidth, re-buckets
+        under ``"exact"`` rounding (no pow2 widening), and runs one more
+        :meth:`solve_prepared` pass per escalation bucket.  The escalated
+        outcome replaces the misconverged one; if it *still* misconverges
+        the inner pass demotes ``converged`` to False.
+        """
+        self._bump("escalations", len(reqs))
+        groups: dict = {}
+        for r in reqs:
+            band = np.asarray(r.band)
+            trimmed = batched.trim_band_to_effective(band)
+            ke = (trimmed.shape[1] - 1) // 2
+            bkt = batched.bucket_shape(
+                trimmed.shape[0], max(ke, 1), eff.p, "exact"
+            )
+            groups.setdefault(bkt, []).append((r, trimmed))
+        for bkt, members in groups.items():
+            sub = [
+                SolveRequest(rid=r.rid, band=trimmed, b=r.b)
+                for r, trimmed in members
+            ]
+            self.solve_prepared(sub, bkt, opts=eff, _escalated=True)
+            for (r, _), s in zip(members, sub):
+                out = s.result
+                out.escalated = True
+                r.result = out
 
     def run_until_drained(
         self, max_steps: int = 10_000, on_leftover: str = "warn"
@@ -406,6 +489,10 @@ def _plan_for_bucket(
         [batched.pad_band_to(jnp.asarray(bd), nb, kb) for bd in bands]
     )
     orig_ns = tuple(int(np.shape(bd)[0]) for bd in bands)
+    # per-band stored bandwidths: pad_band_to embeds a K-widened band via
+    # the interleaved identity-row permutation, and batch_factor needs the
+    # original k of each member to reconstruct those permutations
+    orig_ks = tuple(int((np.shape(bd)[1] - 1) // 2) for bd in bands)
     return batched.BatchedSaPPlan(
-        bands=stacked, k=kb, n=nb, orig_ns=orig_ns, opts=opts
+        bands=stacked, k=kb, n=nb, orig_ns=orig_ns, orig_ks=orig_ks, opts=opts
     )

@@ -50,7 +50,9 @@ def test_bucket_shape_invariants():
 
 
 def test_bucket_shape_exact_vs_pow2():
-    assert bucket_shape(1000, 5, 4, "pow2") == (1024, 8, 4)
+    # pow2 widens K 5 -> 8; the bucket must also hold the interleaved
+    # identity-row embedding: ceil(1000/5)*8 = 1600 rows -> next pow2
+    assert bucket_shape(1000, 5, 4, "pow2") == (2048, 8, 4)
     nb, kb, _ = bucket_shape(1000, 5, 4, "exact")
     assert kb == 5 and nb >= 1000 and nb % (4 * 5) == 0
     with pytest.raises(ValueError):
@@ -60,8 +62,10 @@ def test_bucket_shape_exact_vs_pow2():
 def test_bucket_by_shape_groups_and_order():
     shapes = [(1000, 5), (900, 6), (1024, 8), (100, 2), (1000, 5)]
     buckets = bucket_by_shape(shapes, p=4)
-    # pow2: (1000,5)->(1024,8), (900,6)->(1024,8), (1024,8)->(1024,8)
-    assert buckets[(1024, 8, 4)] == [0, 1, 2, 4]
+    # pow2 + interleave room: (1000,5)->(2048,8), (900,6)->(2048,8),
+    # (1024,8)->(1024,8) (K not widened -> no interleave growth)
+    assert buckets[(2048, 8, 4)] == [0, 1, 4]
+    assert buckets[(1024, 8, 4)] == [2]
     assert buckets[(128, 2, 4)] == [3]
     # exact mode separates distinct shapes
     assert len(bucket_by_shape(shapes, p=4, rounding="exact")) == 4
@@ -90,6 +94,29 @@ def test_padded_system_is_exactly_embedded():
     np.testing.assert_allclose(xp[:60], np.linalg.solve(dense, np.asarray(b)),
                                rtol=1e-10, atol=1e-10)
     np.testing.assert_array_equal(xp[60:], 0.0)
+
+
+def test_k_padded_band_is_permuted_blkdiag():
+    """When the bucket widens K, pad_band_to interleaves identity rows so
+    the padded dense matrix is a symmetric permutation of blkdiag(A, I) --
+    no structurally-singular outer diagonal, no boosted pivots."""
+    from repro.core import pad_permutation
+
+    n, k, nb, kb = 60, 3, 128, 4
+    band, _, _ = _system(n, k, seed=5)
+    perm = pad_permutation(n, k, nb, kb)
+    assert perm is not None  # K widened and the bucket has room
+    padded = pad_band_to(band, nb, kb)
+    dense_p = np.asarray(band_to_dense(padded), np.float64)
+    dense = np.asarray(band_to_dense(band), np.float64)
+    blk = np.eye(nb)
+    blk[:n, :n] = dense
+    # dense_p == P @ blk @ P^T with P the interleave row permutation
+    p_mat = np.zeros((nb, nb))
+    p_mat[perm, np.arange(nb)] = 1.0
+    np.testing.assert_array_equal(dense_p, p_mat @ blk @ p_mat.T)
+    # the padded band still only occupies |offset| <= kb diagonals
+    assert padded.shape == (nb, 2 * kb + 1)
 
 
 # ---------------------------------------------------------------------------

@@ -242,10 +242,11 @@ def test_requests_route_to_per_class_variants():
     svc = AsyncSolverService(
         _opts(variant="auto", maxiter=400), max_batch=8, start=False
     )
-    # k=4 == the bucket K: width padding would degrade E's exactness on
-    # an ill-conditioned matrix (see the ROADMAP width-padding caveat)
-    dom = _mat(128, 4, seed=0, d=1.5)
-    osc = np.float32(oscillatory_banded(128, 4, d=0.5, seed=1))
+    # k=3 rounds up to the bucket K=4: the interleaved identity-row
+    # embedding keeps E exact on the ill-conditioned matrix, so no
+    # K-pinning workaround is needed anymore
+    dom = _mat(128, 3, seed=0, d=1.5)
+    osc = np.float32(oscillatory_banded(128, 3, d=0.5, seed=1))
     _, bd = _rhs_for(dom, seed=0)
     _, bo = _rhs_for(osc, seed=1)
     fd = svc.submit(dom, bd)
@@ -255,6 +256,8 @@ def test_requests_route_to_per_class_variants():
     rd, ro = fd.result(timeout=0), fo.result(timeout=0)
     assert rd.variant == "C" and rd.converged  # d >= 1: truncated SPIKE
     assert ro.variant == "E" and ro.converged  # d < 1: exact reduced system
+    assert np.isfinite(rd.true_resnorm) and np.isfinite(ro.true_resnorm)
+    assert not ro.misconverged  # the PR 6 silent-failure mode stays dead
     # the oscillatory matrix is ill-conditioned: check the residual, not
     # the distance to the generating x (which f32 noise amplifies)
     res = np.asarray(
@@ -297,7 +300,7 @@ def test_thrash_guard_widens_rounding():
     band = _mat(97, 3, seed=99)
     fut = svc.submit(band, _rhs_for(band, seed=99)[1])
     svc.drain_once()
-    assert fut.result(timeout=0).bucket[0] == 128
+    assert fut.result(timeout=0).bucket[0] == 256
     svc.close()
 
 

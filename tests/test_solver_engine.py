@@ -138,13 +138,13 @@ def test_engine_batch_larger_than_cache_survives_midstep_eviction():
 def test_engine_batches_one_bucket_per_step():
     """max_batch caps a step; different buckets never share a batch."""
     eng = _engine(max_batch=2)
-    small = [_mat(100, 3, seed=i) for i in range(3)]  # bucket (128, 4, 4)
+    small = [_mat(100, 3, seed=i) for i in range(3)]  # bucket (256, 4, 4)
     big = _mat(600, 3, seed=9)  # bucket (1024, 4, 4)
     for band in [*small, big]:
         eng.submit_system(band, _rhs_for(band, seed=0)[1])
     done1 = eng.step()  # largest bucket first, capped at 2
     assert len(done1) == 2
-    assert {r.result.bucket for r in done1} == {(128, 4, 4)}
+    assert {r.result.bucket for r in done1} == {(256, 4, 4)}
     done_rest = eng.run_until_drained()
     assert len(done_rest) == 2
     assert eng.stats["solved"] == 4 and eng.stats["steps"] == 3
