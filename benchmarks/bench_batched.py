@@ -40,7 +40,13 @@ from repro.core import (  # noqa: E402
 from repro.core.banded import band_matvec, random_banded  # noqa: E402
 from repro.serve import SolverEngine  # noqa: E402
 
-from benchmarks.common import Report, repo_root_default, timeit  # noqa: E402
+from benchmarks.common import (  # noqa: E402
+    Report,
+    TracedReport,
+    repo_root_default,
+    stage_fractions,
+    timeit,
+)
 
 
 def _fleet(s, n, k, d=1.0, seed=0):
@@ -80,8 +86,12 @@ def bench_fleet(report: Report, smoke: bool = False):
 
         us_batched = timeit(batched_all, warmup=1, iters=3)
 
-        bfac = batch_factor(batch_plan(bands, opts))
-        res = bfac.solve_batch(bmat)
+        # One traced pass (post-timing, so tracer overhead never pollutes
+        # the us_per_call figures) to attribute wall time to stages.
+        with report.tracing() as tr:
+            bfac = batch_factor(batch_plan(bands, opts))
+            res = bfac.solve_batch(bmat)
+            jax.block_until_ready(res.x)
         err = float(np.abs(np.asarray(res.x)[:, :n] - xs).max())
         true_res = float(np.asarray(res.true_resnorm).max())
         report.add(f"fleet/loop_S={s}", us_loop, "replan+refactor per system")
@@ -92,6 +102,7 @@ def bench_fleet(report: Report, smoke: bool = False):
             f"per_system_us={us_batched / s:.1f};maxerr={err:.1e};"
             f"conv={bool(np.asarray(res.converged).all())};"
             f"true_res={true_res:.3e};tol={opts.tol:g}",
+            stages=stage_fractions(tr),
         )
 
 
@@ -105,13 +116,14 @@ def bench_engine(report: Report, smoke: bool = False):
         np.float32(random_banded(n0 + 37 * i, k0 + (i % 2), d=1.1, seed=i))
         for i in range(distinct)
     ]
-    t0 = time.perf_counter()
-    for _ in range(steps):  # time-stepping: same matrices, fresh RHS
-        for band in mats:
-            b = rng.normal(size=band.shape[0]).astype(np.float32)
-            eng.submit_system(band, b)
-    done = eng.run_until_drained()
-    wall = time.perf_counter() - t0
+    with report.tracing() as tr:
+        t0 = time.perf_counter()
+        for _ in range(steps):  # time-stepping: same matrices, fresh RHS
+            for band in mats:
+                b = rng.normal(size=band.shape[0]).astype(np.float32)
+                eng.submit_system(band, b)
+        done = eng.run_until_drained()
+        wall = time.perf_counter() - t0
     conv = all(r.result.converged for r in done)
     true_res = max(r.result.true_resnorm for r in done)
     report.add(
@@ -122,6 +134,7 @@ def bench_engine(report: Report, smoke: bool = False):
         f"steps={eng.stats['steps']};sys_per_s={len(done) / wall:.1f};"
         f"conv={conv};true_res={true_res:.3e};tol={opts.tol:g};"
         f"misconverged={eng.stats['misconverged']}",
+        stages=stage_fractions(tr),
     )
 
 
@@ -138,7 +151,7 @@ def main(argv=None) -> None:
                     help="directory for BENCH_batched.json "
                          "(default: the repo root)")
     args = ap.parse_args(argv)
-    report = Report("batched")
+    report = TracedReport("batched")
     print("name,us_per_call,derived", flush=True)
     run(report, smoke=args.smoke)
     report.write_json(

@@ -1,0 +1,139 @@
+"""Validate a Chrome/Perfetto trace_event JSON file (CI bench-smoke gate).
+
+Checks the schema invariants a trace viewer relies on:
+
+  * the document is ``{"traceEvents": [...]}`` with a non-empty list
+  * every event carries ``ph``/``pid``/``tid``; duration events (``B``/
+    ``E``) also carry a numeric ``ts`` and a ``name``
+  * per thread, every ``E`` closes an open ``B`` of the same name and no
+    ``B`` is left open (events are sorted by ``ts`` first -- file order
+    is not load-bearing; retroactive spans may interleave)
+
+plus two repo-specific gates:
+
+  * ``--require NAME...``: each named span must appear as a completed
+    ``B``/``E`` pair (the tentpole's acceptance list: reorder, factor.lu,
+    factor.spike, krylov)
+  * ``--bench BENCH.json``: at least one row carries a ``stages`` dict
+    and every ``stages`` dict sums to ~1.0
+
+Exit code 0 on success; prints the first violation and exits 1 otherwise.
+
+    python -m benchmarks.check_trace trace.json \
+        --require reorder factor.lu factor.spike krylov \
+        --bench BENCH_batched.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+class TraceError(ValueError):
+    """A trace/bench file violated the checked schema."""
+
+
+def load_events(path) -> list:
+    doc = json.loads(Path(path).read_text())
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        raise TraceError(f"{path}: no traceEvents list")
+    return events
+
+
+def validate_events(events: list) -> dict:
+    """Check B/E pairing + required fields; return {name: count} of pairs."""
+    by_tid: dict = {}
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph is None or "pid" not in ev or "tid" not in ev:
+            raise TraceError(f"event {i}: missing ph/pid/tid: {ev}")
+        if ph in ("B", "E"):
+            if not isinstance(ev.get("ts"), (int, float)):
+                raise TraceError(f"event {i}: {ph} without numeric ts: {ev}")
+            if ph == "B" and not ev.get("name"):
+                raise TraceError(f"event {i}: B without name: {ev}")
+            by_tid.setdefault(ev["tid"], []).append((ev["ts"], i, ev))
+    if not by_tid:
+        raise TraceError("no B/E duration events in trace")
+    pairs: dict = {}
+    for tid, evs in by_tid.items():
+        evs.sort(key=lambda t: (t[0], t[1]))  # by ts; file order breaks ties
+        open_spans: list = []
+        for _, i, ev in evs:
+            if ev["ph"] == "B":
+                open_spans.append(ev["name"])
+            else:
+                name = ev.get("name")
+                # close the most recent open B of the same name (retroactive
+                # request spans may overlap without strict nesting)
+                for j in range(len(open_spans) - 1, -1, -1):
+                    if open_spans[j] == name:
+                        open_spans.pop(j)
+                        pairs[name] = pairs.get(name, 0) + 1
+                        break
+                else:
+                    raise TraceError(
+                        f"tid {tid}: E {name!r} (event {i}) closes no open B"
+                    )
+        if open_spans:
+            raise TraceError(f"tid {tid}: unclosed B spans: {open_spans}")
+    return pairs
+
+
+def check_required(pairs: dict, required: list) -> None:
+    missing = [name for name in required if not pairs.get(name)]
+    if missing:
+        raise TraceError(
+            f"required spans missing from trace: {missing} "
+            f"(present: {sorted(pairs)})"
+        )
+
+
+def check_bench_stages(path, tol: float = 0.02) -> int:
+    """Every ``stages`` dict sums to ~1.0; at least one row carries one."""
+    doc = json.loads(Path(path).read_text())
+    n = 0
+    for row in doc.get("rows", []):
+        stages = row.get("stages")
+        if stages is None:
+            continue
+        n += 1
+        total = sum(stages.values())
+        if abs(total - 1.0) > tol:
+            raise TraceError(
+                f"{path}: row {row['name']!r} stages sum to {total:.4f}, "
+                f"expected ~1.0: {stages}"
+            )
+    if n == 0:
+        raise TraceError(f"{path}: no row carries a 'stages' dict")
+    return n
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace_event JSON file")
+    ap.add_argument("--require", nargs="*", default=[],
+                    help="span names that must appear as B/E pairs")
+    ap.add_argument("--bench", default=None,
+                    help="BENCH_*.json whose rows must carry stage "
+                         "fractions summing to ~1.0")
+    args = ap.parse_args(argv)
+    try:
+        pairs = validate_events(load_events(args.trace))
+        check_required(pairs, args.require)
+        print(f"{args.trace}: OK -- {sum(pairs.values())} spans, "
+              f"{len(pairs)} distinct names")
+        if args.bench:
+            n = check_bench_stages(args.bench)
+            print(f"{args.bench}: OK -- {n} rows with stage fractions")
+    except TraceError as e:
+        print(f"TRACE INVALID: {e}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,12 +9,15 @@ job, diffable across commits).
 
 from __future__ import annotations
 
+import contextlib
 import json
 import platform
 import time
 from pathlib import Path
 
 import jax
+
+from repro.obs.trace import Tracer, use_tracer
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -32,20 +35,81 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return times[len(times) // 2] * 1e6
 
 
+# Span-name -> stage-bucket map for BENCH_*.json ``stages`` breakdowns.
+# Only *root-visible* lifecycle spans appear here: the inner factor spans
+# (factor.lu / factor.spike / factor.reduced) are no-ops when factoring
+# runs under jit (the batched path), so the coarse factor.* roots carry
+# the wall time we can actually attribute.
+STAGE_SPANS = {
+    "reorder.db": "db",
+    "reorder.cm": "cm",
+    "factor": "lu_spk",
+    "factor.batch": "lu_spk",
+    "factor.lu": "lu_spk",
+    "factor.spike": "lu_spk",
+    "factor.reduced": "lu_spk",
+    "factor.split": "lu_spk",
+    "krylov": "krylov",
+}
+
+
+def stage_fractions(tracer: Tracer) -> dict | None:
+    """Fold a tracer's spans into {db, cm, lu_spk, krylov} wall fractions.
+
+    Sums self-exclusive time per mapped span name (children mapped to the
+    same stage are not double counted because only top-most mapped spans
+    in each root chain are taken), then normalizes to sum to 1.0.
+    Returns None when no mapped span was recorded -- a bench row measured
+    without tracing gets no bogus stages dict.
+    """
+    totals: dict[str, float] = {}
+
+    def visit(sp, inside_mapped: bool):
+        stage = STAGE_SPANS.get(sp.name)
+        if stage is not None and not inside_mapped:
+            totals[stage] = totals.get(stage, 0.0) + sp.duration_s
+            inside = True
+        else:
+            inside = inside_mapped
+        for ch in sp.children:
+            visit(ch, inside)
+
+    for root in tracer.roots():
+        visit(root, False)
+    total = sum(totals.values())
+    if total <= 0.0:
+        return None
+    return {k: round(v / total, 4) for k, v in sorted(totals.items())}
+
+
 class Report:
     def __init__(self, name: str = ""):
         self.name = name
         self.rows = []
         self.records = []
 
-    def add(self, name: str, us_per_call: float, derived: str = ""):
+    def add(self, name: str, us_per_call: float, derived: str = "",
+            stages: dict | None = None):
         row = f"{name},{us_per_call:.1f},{derived}"
         self.rows.append(row)
-        self.records.append(
-            {"name": name, "us_per_call": round(us_per_call, 1),
-             "derived": _parse_derived(derived)}
-        )
+        rec = {"name": name, "us_per_call": round(us_per_call, 1),
+               "derived": _parse_derived(derived)}
+        if stages:
+            rec["stages"] = stages
+        self.records.append(rec)
         print(row, flush=True)
+
+    @contextlib.contextmanager
+    def tracing(self):
+        """Yield a tracer scoped to one measurement block.
+
+        The base Report yields a *disabled*, non-activated tracer: bench
+        code writes ``with report.tracing() as tr: ...; report.add(...,
+        stages=stage_fractions(tr))`` uniformly, and stages simply come
+        out None.  :class:`TracedReport` overrides this to install a live
+        tracer so the same rows gain a ``stages`` dict.
+        """
+        yield Tracer(enabled=False)
 
     def write_json(self, path, meta: dict | None = None) -> Path:
         """Serialize the collected rows as a BENCH_*.json trajectory file.
@@ -75,6 +139,23 @@ class Report:
         path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
         print(f"wrote {path}", flush=True)
         return path
+
+
+class TracedReport(Report):
+    """A Report whose :meth:`tracing` blocks run under a live tracer.
+
+    Each ``with report.tracing() as tr:`` block installs a fresh enabled
+    :class:`~repro.obs.trace.Tracer` process-wide for its duration, so
+    the instrumented library spans (reorder.*, factor.*, krylov) land on
+    ``tr`` and :func:`stage_fractions` can fold them into the row's
+    ``stages`` dict.
+    """
+
+    @contextlib.contextmanager
+    def tracing(self):
+        tracer = Tracer()
+        with use_tracer(tracer):
+            yield tracer
 
 
 class MisconvergedBench(RuntimeError):

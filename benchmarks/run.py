@@ -12,7 +12,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from benchmarks.common import Report, repo_root_default  # noqa: E402
+from benchmarks.common import Report, TracedReport, repo_root_default  # noqa: E402
 
 
 def main() -> None:
@@ -26,14 +26,14 @@ def main() -> None:
     # their rows also land in machine-readable BENCH_*.json files.
     from benchmarks import bench_solver  # noqa: E402
 
-    solver_report = Report("solver")
+    solver_report = TracedReport("solver")
     bench_solver.run(solver_report)
     solver_report.write_json(out / "BENCH_solver.json")
     jax.clear_caches()
 
     from benchmarks import bench_batched  # noqa: E402
 
-    batched_report = Report("batched")
+    batched_report = TracedReport("batched")
     bench_batched.run(batched_report)
     batched_report.write_json(out / "BENCH_batched.json")
     jax.clear_caches()

@@ -51,6 +51,12 @@ class SolverConfig:
     deadline_s: float | None = None
     thrash_window: int = 32
     thrash_ratio: float = 0.5
+    # observability: upper bucket edges for the service's latency-style
+    # histograms (time_in_queue_s).  None keeps the library default
+    # (repro.serve.metrics.DEFAULT_BOUNDS, 100us..60s); a deployment with
+    # a tight latency envelope narrows these to get p99 resolution where
+    # its traffic actually lands.
+    hist_bounds: tuple[float, ...] | None = None
 
     def to_sap_options(self, p: int):
         """Map this workload config onto single-device solver options (the
@@ -93,6 +99,7 @@ class SolverConfig:
             default_deadline_s=self.deadline_s,
             thrash_window=self.thrash_window,
             thrash_ratio=self.thrash_ratio,
+            hist_bounds=self.hist_bounds,
             start=start,
         )
 

@@ -55,12 +55,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.trace import span
 from .banded import band_to_block_tridiag, diag_dominance_factor
 from .operators import BandedOperator
 from .sap import (
     SaPFactorization,
     SaPOptions,
     SaPSolveResult,
+    _convergence_summary,
     _precond_dtype,
     _solve_impl,
     resolve_variant,
@@ -394,7 +396,9 @@ class BatchedSaPFactorization:
     def variant(self) -> str:
         return self.fac.variant
 
-    def solve_batch(self, b: jax.Array) -> SaPSolveResult:
+    def solve_batch(
+        self, b: jax.Array, record_history: bool = False
+    ) -> SaPSolveResult:
         """Solve system i against RHS i: b (S, N') -> x (S, N')."""
         b = jnp.asarray(b)
         if b.ndim != 2 or b.shape != (self.s, self.n):
@@ -402,9 +406,17 @@ class BatchedSaPFactorization:
                 f"solve_batch expects one RHS per system, shape "
                 f"({self.s}, {self.n}); got {b.shape}"
             )
-        return _solve_batch(self.fac, b)
+        with span(
+            "krylov", s=self.s, n=self.n, k=self.k, variant=self.variant
+        ) as sp:
+            res = sp.sync(_solve_batch(self.fac, b, record_history=record_history))
+        if sp:
+            sp.annotate(convergence=_convergence_summary(res))
+        return res
 
-    def solve_batch_many(self, b: jax.Array) -> SaPSolveResult:
+    def solve_batch_many(
+        self, b: jax.Array, record_history: bool = False
+    ) -> SaPSolveResult:
         """Solve R RHS per system: b (S, N', R) -> x (S, N', R)."""
         b = jnp.asarray(b)
         if b.ndim != 3 or b.shape[:2] != (self.s, self.n):
@@ -412,25 +424,45 @@ class BatchedSaPFactorization:
                 f"solve_batch_many expects shape ({self.s}, {self.n}, R); "
                 f"got {b.shape}"
             )
-        return _solve_batch_many(self.fac, b)
+        with span(
+            "krylov",
+            s=self.s,
+            n=self.n,
+            k=self.k,
+            variant=self.variant,
+            nrhs=int(b.shape[2]),
+        ) as sp:
+            res = sp.sync(
+                _solve_batch_many(self.fac, b, record_history=record_history)
+            )
+        if sp:
+            sp.annotate(convergence=_convergence_summary(res))
+        return res
 
 
-@jax.jit
-def _solve_batch(fac: SaPFactorization, b: jax.Array) -> SaPSolveResult:
+@partial(jax.jit, static_argnames=("record_history",))
+def _solve_batch(
+    fac: SaPFactorization, b: jax.Array, record_history: bool = False
+) -> SaPSolveResult:
     # every data leaf of ``fac`` carries the system axis: plain vmap.
-    return jax.vmap(_solve_impl)(fac, b)
+    return jax.vmap(lambda f, bi: _solve_impl(f, bi, record_history))(fac, b)
 
 
-@jax.jit
-def _solve_batch_many(fac: SaPFactorization, b: jax.Array) -> SaPSolveResult:
+@partial(jax.jit, static_argnames=("record_history",))
+def _solve_batch_many(
+    fac: SaPFactorization, b: jax.Array, record_history: bool = False
+) -> SaPSolveResult:
     inner_axes = SaPSolveResult(
         x=1, iterations=0, resnorm=0, converged=0, true_resnorm=0,
         d_factor=None,
+        history=0 if record_history else None,
     )
 
     def one_system(f, bm):
         return jax.vmap(
-            lambda bi: _solve_impl(f, bi), in_axes=1, out_axes=inner_axes
+            lambda bi: _solve_impl(f, bi, record_history),
+            in_axes=1,
+            out_axes=inner_axes,
         )(bm)
 
     return jax.vmap(one_system)(fac, b)
@@ -506,8 +538,12 @@ def batch_factor(bpl: BatchedSaPPlan) -> BatchedSaPFactorization:
     if variant == "auto":
         d_all = jax.jit(jax.vmap(diag_dominance_factor))(bpl.bands)
         variant = resolve_variant("auto", float(jnp.min(d_all)))
-    stages = _factor_stages_fn(bpl.k, opts.p, variant, _factor_key(opts))
-    pcs, d_factors = stages(bpl.bands)
+    with span(
+        "factor.batch", s=bpl.s, n=bpl.n, k=bpl.k, p=opts.p, variant=variant
+    ) as sp:
+        stages = _factor_stages_fn(bpl.k, opts.p, variant, _factor_key(opts))
+        pcs, d_factors = stages(bpl.bands)
+        sp.sync(pcs)
     x_perm, b_perm = _stacked_permutations(bpl)
     fac = SaPFactorization(
         op=BandedOperator(band=bpl.bands, n=bpl.n, k=bpl.k),

@@ -51,6 +51,12 @@ class KrylovResult(NamedTuple):
     resnorm: jax.Array  # preconditioned residual norm at exit
     converged: jax.Array
     true_resnorm: jax.Array | None = None  # ||b - A x|| / ||b||
+    # With record_history=True: (maxiter,) preconditioned relative residual
+    # after each outer sweep, NaN-padded past the exit sweep.  The number of
+    # non-NaN entries is ceil(iterations) (BiCGStab quarter-exits record the
+    # sweep they exit from); entry i is the residual the convergence test saw
+    # at the end of sweep i.  None when history was not requested.
+    history: jax.Array | None = None
 
 
 def _true_resnorm(matvec, b, x) -> jax.Array:
@@ -80,11 +86,18 @@ def _bicgstab2_impl(
     x0: jax.Array | None = None,
     tol: float = 1e-10,
     maxiter: int = 500,
+    record_history: bool = False,
 ) -> KrylovResult:
     """BiCGStab(2) with left preconditioning (unjitted body).
 
     One outer "iteration" = two matvec+precond in the BiCG part plus two in
     the MR part, counted as 4 quarter-exits to mirror the paper's tables.
+
+    ``record_history`` is a static flag: when True a fixed-size ``(maxiter,)``
+    NaN-initialized residual array rides through the while_loop state and is
+    returned on ``KrylovResult.history``; when False the loop state is
+    byte-identical to before the flag existed (no recompilation of cached
+    history-free executables).
     """
     dtype = b.dtype
     op = lambda v: precond(matvec(v)).astype(dtype)
@@ -97,7 +110,7 @@ def _bicgstab2_impl(
     eps = jnp.asarray(1e-300 if dtype == jnp.float64 else 1e-30, dtype)
 
     def cond(state):
-        (x, r, u, rho, omega, alpha, it, done) = state
+        (x, r, u, rho, omega, alpha, it, done) = state[:8]
         return (~done) & (it < maxiter)
 
     def _select(c, a, b):
@@ -111,7 +124,10 @@ def _bicgstab2_impl(
         keep the snapshot at that point -- continuing the sweep with a
         (near-)zero residual would divide by degenerate inner products.
         """
-        (x, r0, u0, rho0, omega, alpha, it, done) = state
+        (x, r0, u0, rho0, omega, alpha, it, done) = state[:8]
+        # `it` at sweep entry is always whole (quarter-exits end the loop),
+        # so it doubles as the 0-based history index for this sweep.
+        sweep_idx = it.astype(jnp.int32)
         rho0 = -omega * rho0
 
         # ---- BiCG part, j = 0 -------------------------------------------
@@ -172,7 +188,11 @@ def _bicgstab2_impl(
 
         q4 = jnp.linalg.norm(r0) <= tol * bnorm
         full = (x, r0, u0, rho0, omega_new, alpha, it + 1.0, q4)
-        return _select(q1, snap1, _select(q2, snap2, full))
+        new = _select(q1, snap1, _select(q2, snap2, full))
+        if record_history:
+            hist = state[8].at[sweep_idx].set(jnp.linalg.norm(new[1]) / bnorm)
+            return new + (hist,)
+        return new
 
     u = jnp.zeros_like(b)
     state = (
@@ -185,7 +205,10 @@ def _bicgstab2_impl(
         jnp.asarray(0.0, dtype),  # iterations
         jnp.linalg.norm(r0) <= tol * bnorm,
     )
-    (x, r, _, _, _, _, it, done) = jax.lax.while_loop(cond, body, state)
+    if record_history:
+        state = state + (jnp.full((maxiter,), jnp.nan, dtype),)
+    out = jax.lax.while_loop(cond, body, state)
+    (x, r, _, _, _, _, it, done) = out[:8]
     rnorm = jnp.linalg.norm(r)
     return KrylovResult(
         x=x,
@@ -193,11 +216,13 @@ def _bicgstab2_impl(
         resnorm=rnorm / bnorm,
         converged=done,
         true_resnorm=_true_resnorm(matvec, b, x),
+        history=out[8] if record_history else None,
     )
 
 
 _bicgstab2_jit = jax.jit(
-    _bicgstab2_impl, static_argnames=("matvec", "precond", "maxiter")
+    _bicgstab2_impl,
+    static_argnames=("matvec", "precond", "maxiter", "record_history"),
 )
 
 
@@ -208,9 +233,12 @@ def bicgstab2(
     x0: jax.Array | None = None,
     tol: float = 1e-10,
     maxiter: int = 500,
+    record_history: bool = False,
 ) -> KrylovResult:
     """Jitted BiCGStab(2); accepts callables or LinearOperators."""
-    return _bicgstab2_jit(as_matvec(matvec), b, as_matvec(precond), x0, tol, maxiter)
+    return _bicgstab2_jit(
+        as_matvec(matvec), b, as_matvec(precond), x0, tol, maxiter, record_history
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +253,7 @@ def _cg_impl(
     x0: jax.Array | None = None,
     tol: float = 1e-10,
     maxiter: int = 1000,
+    record_history: bool = False,
 ) -> KrylovResult:
     dtype = b.dtype
     x = jnp.zeros_like(b) if x0 is None else x0
@@ -236,11 +265,11 @@ def _cg_impl(
     bnorm = jnp.where(bnorm > 0, bnorm, 1.0)
 
     def cond(state):
-        (x, r, z, p, rz, it, done) = state
+        (x, r, z, p, rz, it, done) = state[:7]
         return (~done) & (it < maxiter)
 
     def body(state):
-        (x, r, z, p, rz, it, done) = state
+        (x, r, z, p, rz, it, done) = state[:7]
         ap = matvec(p)
         denom = _dot(p, ap)
         alpha = jnp.where(jnp.abs(denom) > 0, rz / denom, 0.0)
@@ -250,8 +279,13 @@ def _cg_impl(
         rz_new = _dot(r, z)
         beta = jnp.where(jnp.abs(rz) > 0, rz_new / rz, 0.0)
         p = z + beta * p
-        done = jnp.linalg.norm(r) <= tol * bnorm
-        return (x, r, z, p, rz_new, it + 1.0, done)
+        rnorm = jnp.linalg.norm(r)
+        done = rnorm <= tol * bnorm
+        new = (x, r, z, p, rz_new, it + 1.0, done)
+        if record_history:
+            hist = state[7].at[it.astype(jnp.int32)].set(rnorm / bnorm)
+            return new + (hist,)
+        return new
 
     state = (
         x,
@@ -262,17 +296,23 @@ def _cg_impl(
         jnp.asarray(0.0, dtype),
         jnp.linalg.norm(r) <= tol * bnorm,
     )
-    (x, r, _, _, _, it, done) = jax.lax.while_loop(cond, body, state)
+    if record_history:
+        state = state + (jnp.full((maxiter,), jnp.nan, dtype),)
+    out = jax.lax.while_loop(cond, body, state)
+    (x, r, _, _, _, it, done) = out[:7]
     return KrylovResult(
         x=x,
         iterations=it,
         resnorm=jnp.linalg.norm(r) / bnorm,
         converged=done,
         true_resnorm=_true_resnorm(matvec, b, x),
+        history=out[7] if record_history else None,
     )
 
 
-_cg_jit = jax.jit(_cg_impl, static_argnames=("matvec", "precond", "maxiter"))
+_cg_jit = jax.jit(
+    _cg_impl, static_argnames=("matvec", "precond", "maxiter", "record_history")
+)
 
 
 def cg(
@@ -282,9 +322,12 @@ def cg(
     x0: jax.Array | None = None,
     tol: float = 1e-10,
     maxiter: int = 1000,
+    record_history: bool = False,
 ) -> KrylovResult:
     """Jitted preconditioned CG; accepts callables or LinearOperators."""
-    return _cg_jit(as_matvec(matvec), b, as_matvec(precond), x0, tol, maxiter)
+    return _cg_jit(
+        as_matvec(matvec), b, as_matvec(precond), x0, tol, maxiter, record_history
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -293,10 +336,6 @@ def cg(
 
 
 def _vmap_rhs(impl, default_maxiter):
-    out_axes = KrylovResult(
-        x=1, iterations=0, resnorm=0, converged=0, true_resnorm=0
-    )
-
     def many(
         matvec: MatVec,
         b: jax.Array,
@@ -304,18 +343,29 @@ def _vmap_rhs(impl, default_maxiter):
         x0: jax.Array | None = None,
         tol: float = 1e-10,
         maxiter: int = default_maxiter,
+        record_history: bool = False,
     ) -> KrylovResult:
         """Solve A X = B for B of shape (N, R): one Krylov run per column.
 
         Returns a KrylovResult with x (N, R) and per-column iterations /
-        resnorm / converged of shape (R,).  Unjitted: wrap in jax.jit (or
-        call via SaPFactorization.solve_many) for a cached executable.
+        resnorm / converged of shape (R,); with ``record_history=True``,
+        ``history`` is (R, maxiter) -- row r is column r's residual track.
+        Unjitted: wrap in jax.jit (or call via SaPFactorization.solve_many)
+        for a cached executable.
         """
+        out_axes = KrylovResult(
+            x=1,
+            iterations=0,
+            resnorm=0,
+            converged=0,
+            true_resnorm=0,
+            history=0 if record_history else None,
+        )
         mv, pc = as_matvec(matvec), as_matvec(precond)
         if x0 is None:
-            fn = lambda bi: impl(mv, bi, pc, None, tol, maxiter)
+            fn = lambda bi: impl(mv, bi, pc, None, tol, maxiter, record_history)
             return jax.vmap(fn, in_axes=1, out_axes=out_axes)(b)
-        fn = lambda bi, xi: impl(mv, bi, pc, xi, tol, maxiter)
+        fn = lambda bi, xi: impl(mv, bi, pc, xi, tol, maxiter, record_history)
         return jax.vmap(fn, in_axes=(1, 1), out_axes=out_axes)(b, x0)
 
     return many

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.trace import span
 from . import reorder as reorder_mod
 from .banded import band_to_block_tridiag, diag_dominance_factor
 from .block_lu import DEFAULT_BOOST
@@ -93,6 +94,11 @@ class SaPOptions:
     use_cm: bool = True  # bandwidth-reducing reordering
     third_stage: bool = False  # per-partition CM (Sec. 4.3.2)
     drop_tol: float = 0.0  # element drop-off fraction (0 = keep all)
+    # Record the per-sweep Krylov residual history (observability).  A
+    # solve-time knob only: it never enters the factorization pytree or any
+    # cache key, so flipping it cannot fragment the engine's LRU or change
+    # the compiled history-free executables.
+    record_history: bool = False
 
 
 @dataclasses.dataclass
@@ -133,6 +139,9 @@ class SaPSolveResult(NamedTuple):
     converged: jax.Array
     true_resnorm: Optional[jax.Array] = None
     d_factor: Optional[jax.Array] = None
+    # (maxiter,) per-sweep preconditioned residuals, NaN-padded -- or
+    # (R, maxiter) for solve_many.  None unless record_history was requested.
+    history: Optional[jax.Array] = None
 
 
 def _precond_dtype(opts: SaPOptions):
@@ -222,9 +231,11 @@ def plan(a, opts: Optional[SaPOptions] = None) -> SaPPlan:
     elif isinstance(a, (np.ndarray, jax.Array)):
         require_square_dense(a)
 
-    rp = reorder_mod.analyze(
-        a, use_db=opts.use_db, use_cm=opts.use_cm, drop_tol=opts.drop_tol
-    )
+    with span("plan", use_db=opts.use_db, use_cm=opts.use_cm) as sp:
+        rp = reorder_mod.analyze(
+            a, use_db=opts.use_db, use_cm=opts.use_cm, drop_tol=opts.drop_tol
+        )
+        sp.annotate(n=rp.csr.n, k=rp.k)
     op = CsrOperator.from_csr(rp.csr)
     canonical = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
     return SaPPlan(
@@ -288,8 +299,13 @@ class SaPFactorization:
     def n_pad(self) -> int:
         return self.pc.p * self.pc.m * self.pc.k
 
-    def solve(self, b: jax.Array) -> SaPSolveResult:
-        """Solve A x = b for a single RHS of shape (N,)."""
+    def solve(self, b: jax.Array, record_history: bool = False) -> SaPSolveResult:
+        """Solve A x = b for a single RHS of shape (N,).
+
+        ``record_history=True`` additionally returns the per-sweep Krylov
+        residual track on ``result.history`` (a separate jit cache entry;
+        the default path's compiled executable is untouched).
+        """
         b = jnp.asarray(b)
         if b.ndim != 1:
             raise ValueError(
@@ -298,9 +314,15 @@ class SaPFactorization:
             )
         if b.shape[0] != self.n:
             raise ValueError(f"RHS length {b.shape[0]} != operator size {self.n}")
-        return _solve_one(self, b)
+        with span(
+            "krylov", n=self.n, k=self.k, p=self.p, variant=self.variant, nrhs=1
+        ) as sp:
+            res = sp.sync(_solve_one(self, b, record_history=record_history))
+        if sp:
+            sp.annotate(convergence=_convergence_summary(res))
+        return res
 
-    def solve_many(self, b: jax.Array) -> SaPSolveResult:
+    def solve_many(self, b: jax.Array, record_history: bool = False) -> SaPSolveResult:
         """Solve A X = B for B of shape (N, R): one Krylov run per column."""
         b = jnp.asarray(b)
         if b.ndim != 2:
@@ -310,7 +332,18 @@ class SaPFactorization:
             )
         if b.shape[0] != self.n:
             raise ValueError(f"RHS length {b.shape[0]} != operator size {self.n}")
-        return _solve_many(self, b)
+        with span(
+            "krylov",
+            n=self.n,
+            k=self.k,
+            p=self.p,
+            variant=self.variant,
+            nrhs=int(b.shape[1]),
+        ) as sp:
+            res = sp.sync(_solve_many(self, b, record_history=record_history))
+        if sp:
+            sp.annotate(convergence=_convergence_summary(res))
+        return res
 
 
 def resolve_variant(variant: str, d_factor: float) -> str:
@@ -332,16 +365,20 @@ def factor(pl: SaPPlan) -> SaPFactorization:
     band's degree of diagonal dominance (C for d >= 1, else E).
     """
     opts = pl.opts
-    d_factor = diag_dominance_factor(pl.band_pc)
-    variant = resolve_variant(opts.variant, float(d_factor))
-    bt = band_to_block_tridiag(pl.band_pc, max(pl.k, 1), opts.p)
-    pc = build_preconditioner(
-        bt,
-        variant=variant,
-        boost_eps=opts.boost_eps,
-        precond_dtype=_precond_dtype(opts),
-        reduced_solver=opts.reduced_solver,
-    )
+    with span("factor", n=pl.n, k=pl.k, p=opts.p) as sp:
+        d_factor = diag_dominance_factor(pl.band_pc)
+        variant = resolve_variant(opts.variant, float(d_factor))
+        sp.annotate(variant=variant, d_factor=float(d_factor))
+        with span("factor.split"):
+            bt = band_to_block_tridiag(pl.band_pc, max(pl.k, 1), opts.p)
+        pc = build_preconditioner(
+            bt,
+            variant=variant,
+            boost_eps=opts.boost_eps,
+            precond_dtype=_precond_dtype(opts),
+            reduced_solver=opts.reduced_solver,
+        )
+        sp.sync(pc)
     to_idx = lambda p: None if p is None else jnp.asarray(p, jnp.int32)
     return SaPFactorization(
         op=pl.op,
@@ -363,7 +400,9 @@ def factor(pl: SaPPlan) -> SaPFactorization:
 # ---------------------------------------------------------------------------
 
 
-def _solve_impl(fac: SaPFactorization, b: jax.Array) -> SaPSolveResult:
+def _solve_impl(
+    fac: SaPFactorization, b: jax.Array, record_history: bool = False
+) -> SaPSolveResult:
     """Single-RHS solve body: permute, Krylov, un-permute (all on device)."""
     dt = _resolve_iter_dtype(b.dtype, fac.iter_dtype)
     b = b.astype(dt)
@@ -373,17 +412,27 @@ def _solve_impl(fac: SaPFactorization, b: jax.Array) -> SaPSolveResult:
     n, n_pad = fac.n, fac.n_pad
 
     def precond(r):
-        rp = (
-            jnp.concatenate([r, jnp.zeros((n_pad - n,), r.dtype)])
-            if n_pad != n
-            else r
-        )
-        return fac.pc.apply(rp)[:n]
+        # named_scope (not a host span): this runs under jit/vmap, and the
+        # scope name groups the preconditioner-apply ops in XLA profiles so
+        # the in-device precond-vs-matvec split is readable there.
+        with jax.named_scope("sap.precond_apply"):
+            rp = (
+                jnp.concatenate([r, jnp.zeros((n_pad - n,), r.dtype)])
+                if n_pad != n
+                else r
+            )
+            return fac.pc.apply(rp)[:n]
 
     solver = _cg_impl if fac.use_cg else _bicgstab2_impl
-    res: KrylovResult = solver(
-        fac.op.matvec, b, precond=precond, tol=fac.tol, maxiter=fac.maxiter
-    )
+    with jax.named_scope("sap.krylov"):
+        res: KrylovResult = solver(
+            fac.op.matvec,
+            b,
+            precond=precond,
+            tol=fac.tol,
+            maxiter=fac.maxiter,
+            record_history=record_history,
+        )
     x = res.x[fac.x_perm] if fac.x_perm is not None else res.x
     # true_resnorm is computed in the solver frame (permuted / padded),
     # but permutations preserve norms and exact identity-padding rows
@@ -396,22 +445,54 @@ def _solve_impl(fac: SaPFactorization, b: jax.Array) -> SaPSolveResult:
         converged=res.converged,
         true_resnorm=res.true_resnorm,
         d_factor=fac.d_factor,
+        history=res.history,
     )
 
 
-_solve_one = jax.jit(_solve_impl)
+_solve_one = jax.jit(_solve_impl, static_argnames=("record_history",))
 
 
-@jax.jit
-def _solve_many(fac: SaPFactorization, bmat: jax.Array) -> SaPSolveResult:
+@partial(jax.jit, static_argnames=("record_history",))
+def _solve_many(
+    fac: SaPFactorization, bmat: jax.Array, record_history: bool = False
+) -> SaPSolveResult:
     # d_factor is shared by all RHS (closed over, unbatched): out_axes None
     out_axes = SaPSolveResult(
         x=1, iterations=0, resnorm=0, converged=0, true_resnorm=0,
         d_factor=None,
+        history=0 if record_history else None,
     )
-    return jax.vmap(lambda bi: _solve_impl(fac, bi), in_axes=1, out_axes=out_axes)(
-        bmat
-    )
+    return jax.vmap(
+        lambda bi: _solve_impl(fac, bi, record_history), in_axes=1, out_axes=out_axes
+    )(bmat)
+
+
+def _convergence_summary(res: SaPSolveResult) -> dict:
+    """Host-side convergence digest for the ``krylov`` span attribute."""
+    out = {
+        "iterations": float(np.max(np.asarray(res.iterations))),
+        "converged": bool(np.all(np.asarray(res.converged))),
+        "resnorm": float(np.max(np.asarray(res.resnorm))),
+    }
+    if res.history is not None:
+        hist = np.atleast_2d(np.asarray(res.history))
+        firsts, lasts, recorded, stalled = [], [], 0, False
+        for row in hist:
+            rec = row[~np.isnan(row)]
+            recorded = max(recorded, rec.size)
+            if rec.size == 0:
+                continue
+            firsts.append(float(rec[0]))
+            lasts.append(float(rec[-1]))
+            # Stall heuristic: <10% progress over the last 5 recorded sweeps.
+            if rec.size >= 5 and rec[-1] > 0.9 * rec[-5]:
+                stalled = True
+        out["recorded"] = recorded
+        if firsts:
+            out["first_resnorm"] = max(firsts)
+            out["last_resnorm"] = max(lasts)
+        out["stalled"] = bool(stalled and not out["converged"])
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -65,6 +65,7 @@ from .block_lu import (
     bts_ref,
     gj_inverse,
 )
+from ..obs.trace import span
 from .cyclic_reduction import (
     BCRFactors,
     bcr_factor,
@@ -289,43 +290,53 @@ def build_preconditioner(
     b_cpl = bt.b_cpl.astype(precond_dtype)
     c_cpl = bt.c_cpl.astype(precond_dtype)
 
-    lu = _btf(d, e, f, boost_eps, impl)
+    # Spans degrade to no-ops under jit/vmap tracing (the batched factor
+    # stages call this inside vmap), so host timing only covers eager calls.
+    with span("factor.lu", p=bt.p, m=bt.m, k=bt.k, impl=impl) as sp:
+        lu = sp.sync(_btf(d, e, f, boost_eps, impl))
 
     v_bot = w_top = rbar_inv = red_lu = red_bcr = None
     if variant in ("C", "E") and bt.p > 1:
-        if variant == "C" and spike_mode == "ul":
-            # V_i^(b) = Sinv_i[M-1] @ B_i  for i = 0..P-2
-            v_bot = lu.sinv[:-1, -1] @ b_cpl
-            # W_{i+1}^(t) from the UL factorization of partitions 1..P-1
-            ul = btf_ul_ref(d, e, f, boost_eps)
-            w_top = _flip_rows(ul.sinv[1:, -1] @ _flip_rows(c_cpl))
-        else:
-            # whole right spikes: A_i V_i = [0;..;B_i], keep corner blocks
-            rhs_b = jnp.zeros((bt.p, bt.m, bt.k, bt.k), precond_dtype)
-            rhs_b = rhs_b.at[:-1, -1].set(b_cpl)
-            v_full = _bts(lu, rhs_b, impl)
-            v_bot = v_full[:-1, -1]
-            # whole left spikes: A_{i+1} W_{i+1} = [C_{i+1};0;..]
-            rhs_c = jnp.zeros((bt.p, bt.m, bt.k, bt.k), precond_dtype)
-            rhs_c = rhs_c.at[1:, 0].set(c_cpl)
-            w_full = _bts(lu, rhs_c, impl)
-            w_top = w_full[1:, 0]
+        with span("factor.spike", variant=variant, mode=spike_mode) as sp:
+            if variant == "C" and spike_mode == "ul":
+                # V_i^(b) = Sinv_i[M-1] @ B_i  for i = 0..P-2
+                v_bot = lu.sinv[:-1, -1] @ b_cpl
+                # W_{i+1}^(t) from the UL factorization of partitions 1..P-1
+                ul = btf_ul_ref(d, e, f, boost_eps)
+                w_top = _flip_rows(ul.sinv[1:, -1] @ _flip_rows(c_cpl))
+            else:
+                # whole right spikes: A_i V_i = [0;..;B_i], keep corner blocks
+                rhs_b = jnp.zeros((bt.p, bt.m, bt.k, bt.k), precond_dtype)
+                rhs_b = rhs_b.at[:-1, -1].set(b_cpl)
+                v_full = _bts(lu, rhs_b, impl)
+                v_bot = v_full[:-1, -1]
+                # whole left spikes: A_{i+1} W_{i+1} = [C_{i+1};0;..]
+                rhs_c = jnp.zeros((bt.p, bt.m, bt.k, bt.k), precond_dtype)
+                rhs_c = rhs_c.at[1:, 0].set(c_cpl)
+                w_full = _bts(lu, rhs_c, impl)
+                w_top = w_full[1:, 0]
+            sp.sync((v_bot, w_top))
         if variant == "C":
-            eye = jnp.eye(bt.k, dtype=precond_dtype)
-            rbar = eye - w_top @ v_bot
-            rbar_inv = jax.vmap(lambda a: gj_inverse(a, boost_eps))(rbar)
+            with span("factor.reduced", solver="truncated") as sp:
+                eye = jnp.eye(bt.k, dtype=precond_dtype)
+                rbar = eye - w_top @ v_bot
+                rbar_inv = jax.vmap(lambda a: gj_inverse(a, boost_eps))(rbar)
+                sp.sync(rbar_inv)
         else:
             # exact reduced system: a (P-1)-long chain of 2K x 2K blocks,
             # factored either with the same block-tridiag stack
             # (recursively, O(P) sequential sweep) or by block cyclic
             # reduction (O(log2 P) parallel levels).
-            rd, re, rf = _reduced_interface_system(
-                v_bot, v_full[:-1, 0], w_top, w_full[1:, -1]
-            )
-            if reduced_solver == "bcr":
-                red_bcr = _bcr_factor(rd, re, rf, boost_eps, impl)
-            else:
-                red_lu = _btf_chain(rd, re, rf, boost_eps, impl)
+            with span("factor.reduced", solver=reduced_solver) as sp:
+                rd, re, rf = _reduced_interface_system(
+                    v_bot, v_full[:-1, 0], w_top, w_full[1:, -1]
+                )
+                if reduced_solver == "bcr":
+                    red_bcr = _bcr_factor(rd, re, rf, boost_eps, impl)
+                    sp.sync(red_bcr)
+                else:
+                    red_lu = _btf_chain(rd, re, rf, boost_eps, impl)
+                    sp.sync(red_lu)
     elif variant in ("C", "E"):
         variant = "D"  # single partition: coupled/exact == decoupled
 

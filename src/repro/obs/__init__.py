@@ -1,0 +1,21 @@
+"""Observability: lifecycle tracing, stage trees, Chrome/Perfetto export."""
+
+from .trace import (
+    NULL_SPAN,
+    Span,
+    Tracer,
+    get_tracer,
+    record,
+    span,
+    use_tracer,
+)
+
+__all__ = [
+    "NULL_SPAN",
+    "Span",
+    "Tracer",
+    "get_tracer",
+    "record",
+    "span",
+    "use_tracer",
+]

@@ -16,6 +16,7 @@ hot path (histograms pre-size their bucket counts).
 from __future__ import annotations
 
 import bisect
+import re
 import threading
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -124,12 +125,25 @@ class Histogram:
             return self._sum
 
     def quantile(self, q: float) -> float:
-        """Upper-edge estimate of quantile ``q`` in [0, 1] (nan if empty)."""
+        """Upper-edge estimate of quantile ``q`` in [0, 1].
+
+        Edge behavior is exact, not bucket-interpolated: an *empty*
+        histogram returns NaN for every ``q`` (there is no observation to
+        estimate from); ``q=0`` returns the observed minimum and ``q=1``
+        the observed maximum, since the tracked min/max are exact while
+        bucket edges would only bound them.  Interior quantiles report
+        the upper edge of the bucket the rank falls in (the conservative
+        prometheus-style estimate).
+        """
         if not 0.0 <= q <= 1.0:
             raise ValueError(f"quantile {q} outside [0, 1]")
         with self._lock:
             if self._count == 0:
                 return float("nan")
+            if q == 0.0:
+                return self._min
+            if q == 1.0:
+                return self._max
             rank = q * self._count
             seen = 0
             for i, c in enumerate(self._counts):
@@ -139,6 +153,11 @@ class Histogram:
                         return self.bounds[i]
                     return self._max  # overflow bucket: best bound we have
             return self._max
+
+    def _exposition_data(self) -> tuple:
+        """(bounds, per-bucket counts, count, sum) under one lock hold."""
+        with self._lock:
+            return self.bounds, list(self._counts), self._count, self._sum
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -225,3 +244,49 @@ class MetricsRegistry:
             "gauges": {n: g.snapshot() for n, g in gauges.items()},
             "histograms": {n: h.snapshot() for n, h in histograms.items()},
         }
+
+    def to_prometheus(self, prefix: str = "") -> str:
+        """Every instrument in the Prometheus text exposition format.
+
+        Counters carry the conventional ``_total`` suffix; histograms emit
+        *cumulative* ``_bucket{le="..."}`` series (including the ``+Inf``
+        catch-all) plus ``_sum`` / ``_count``.  Names are sanitized to the
+        prometheus charset.  Serve the result over HTTP with content type
+        ``text/plain; version=0.0.4`` and it scrapes directly.
+        """
+        lines = []
+        with self._lock:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            histograms = dict(self._histograms)
+        for n, c in sorted(counters.items()):
+            pn = _prom_name(prefix + n)
+            if not pn.endswith("_total"):
+                pn += "_total"
+            lines.append(f"# TYPE {pn} counter")
+            lines.append(f"{pn} {_prom_value(c.value)}")
+        for n, g in sorted(gauges.items()):
+            pn = _prom_name(prefix + n)
+            lines.append(f"# TYPE {pn} gauge")
+            lines.append(f"{pn} {_prom_value(g.value)}")
+        for n, h in sorted(histograms.items()):
+            pn = _prom_name(prefix + n)
+            bounds, counts, count, total = h._exposition_data()
+            lines.append(f"# TYPE {pn} histogram")
+            cum = 0
+            for b, c in zip(bounds, counts):
+                cum += c
+                lines.append(f'{pn}_bucket{{le="{_prom_value(b)}"}} {cum}')
+            lines.append(f'{pn}_bucket{{le="+Inf"}} {count}')
+            lines.append(f"{pn}_sum {_prom_value(total)}")
+            lines.append(f"{pn}_count {count}")
+        return "\n".join(lines) + "\n"
+
+
+def _prom_name(name: str) -> str:
+    n = re.sub(r"[^a-zA-Z0-9_:]", "_", name)
+    return f"_{n}" if n and n[0].isdigit() else n
+
+
+def _prom_value(v: float) -> str:
+    return format(float(v), ".10g")

@@ -64,6 +64,7 @@ import numpy as np
 
 from repro.core import batched
 from repro.core.sap import SaPOptions
+from repro.obs.trace import get_tracer, span
 from repro.serve.metrics import MetricsRegistry
 from repro.serve.solver_engine import (
     SolveOutcome,
@@ -169,6 +170,11 @@ class _Ticket:
     deadline: Optional[float]  # absolute time.monotonic(), None = none
     t_submit: float
     future: SolveFuture
+    # submit timestamp on the active tracer's clock (0.0 when no tracer was
+    # active): lets the drain thread emit a retroactive "serve.request" span
+    # covering submit -> resolve.  Separate from t_submit because deadlines
+    # use time.monotonic() while the tracer clock is time.perf_counter().
+    t_trace: float = 0.0
 
     def sort_key(self):
         # higher priority first, then earliest deadline (EDF), then FIFO
@@ -205,7 +211,15 @@ class AsyncSolverService:
     default_deadline_s : deadline applied when submit() passes none
     thrash_window   : evaluate the thrash guard every this-many solves
     thrash_ratio    : evictions/solve above which rounding widens
+    class_overrides : per-dominance-class SaPOptions overrides
     metrics         : optional shared MetricsRegistry
+    hist_bounds     : upper bucket edges for the latency-style histograms
+                      (``time_in_queue_s``); None keeps
+                      :data:`repro.serve.metrics.DEFAULT_BOUNDS`.  Settable
+                      from :class:`repro.configs.sap_solver.SolverConfig`
+                      (``hist_bounds``), so deployments with tight or loose
+                      latency envelopes get resolution where their traffic
+                      actually lands.
     start           : spawn the drain thread immediately (tests pass
                       False and call ``drain_once()`` deterministically)
     """
@@ -223,6 +237,7 @@ class AsyncSolverService:
         thrash_ratio: float = 0.5,
         class_overrides: Optional[Dict[str, SaPOptions]] = None,
         metrics: Optional[MetricsRegistry] = None,
+        hist_bounds: Optional[Tuple[float, ...]] = None,
         start: bool = True,
     ):
         base = opts or SaPOptions()
@@ -266,7 +281,7 @@ class AsyncSolverService:
         self._m_misconverged = m.counter("misconverged_total")
         self._m_escalations = m.counter("escalations")
         self._m_depth = m.histogram("queue_depth", depth)
-        self._m_wait = m.histogram("time_in_queue_s")
+        self._m_wait = m.histogram("time_in_queue_s", hist_bounds)
         self._m_occ = m.histogram("batch_occupancy", occupancy)
         self._m_pending = m.gauge("pending_now")
 
@@ -348,6 +363,8 @@ class AsyncSolverService:
         dclass = DOMINANT if d >= 1.0 else NON_DOMINANT
         n, k = band.shape[0], (band.shape[1] - 1) // 2
         now = time.monotonic()
+        tr = get_tracer()
+        t_trace = tr.now() if tr else 0.0
         fut = SolveFuture(next(self._rid))
         with self._cv:
             while self._n_pending >= self.queue_cap and not self._closing:
@@ -372,7 +389,7 @@ class AsyncSolverService:
                 bucket=bucket, priority=priority,
                 deadline=(now + deadline_s) if deadline_s is not None
                 else None,
-                t_submit=now, future=fut,
+                t_submit=now, future=fut, t_trace=t_trace,
             )
             self._pending.setdefault((bucket, dclass), []).append(ticket)
             self._n_pending += 1
@@ -466,12 +483,19 @@ class AsyncSolverService:
         try:
             # the device batch: runs outside the condition variable, so
             # submitters keep hashing/enqueueing while this is in flight
-            self.engine.solve_prepared(reqs, bucket, opts=opts)
+            with span(
+                "serve.dispatch",
+                bucket=f"{bucket[0]}x{bucket[1]}",
+                dclass=dclass,
+                batch=len(tickets),
+            ):
+                self.engine.solve_prepared(reqs, bucket, opts=opts)
         except Exception as e:  # resolve, never hang the futures
             for t in tickets:
                 t.future._resolve(Cancelled(f"error: {e!r}"))
             return len(tickets)
         now = time.monotonic()
+        tr = get_tracer()
         hits = 0
         mis = esc = 0
         for t, r in zip(tickets, reqs):
@@ -482,6 +506,18 @@ class AsyncSolverService:
             mis += bool(r.result.escalated or r.result.misconverged)
             self._m_wait.observe(now - t.t_submit)
             t.future._resolve(r.result)
+            if tr is not None and t.t_trace > 0.0:
+                # retroactive per-request span: queue -> dispatch -> resolve
+                tr.record(
+                    "serve.request",
+                    t.t_trace,
+                    tr.now(),
+                    rid=t.rid,
+                    dclass=t.dclass,
+                    bucket=f"{t.bucket[0]}x{t.bucket[1]}",
+                    queue_s=round(now - t.t_submit, 6),
+                    cache_hit=bool(r.result.cache_hit),
+                )
         self._m_solved.inc(len(tickets))
         self._m_hits.inc(hits)
         self._m_misses.inc(len(tickets) - hits)
@@ -532,6 +568,14 @@ class AsyncSolverService:
     def pending(self) -> int:
         with self._cv:
             return self._n_pending
+
+    def render(self) -> str:
+        """Prometheus text exposition of the service's metrics registry.
+
+        Serve over HTTP with content type ``text/plain; version=0.0.4``
+        and a stock Prometheus scraper ingests it as-is.
+        """
+        return self.metrics.to_prometheus()
 
     def snapshot(self) -> dict:
         """JSON-ready view: service metrics + engine counters + derived."""

@@ -1,0 +1,154 @@
+"""Krylov convergence history: shape, NaN padding, parity, cache safety."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SaPOptions, factor, plan_banded
+from repro.core.banded import band_matvec, random_banded
+from repro.core.krylov import bicgstab2, cg
+from repro.serve import SolverEngine
+
+
+def _system(n=320, k=5, d=1.0, seed=11):
+    band = jnp.asarray(random_banded(n, k, d=d, seed=seed), jnp.float32)
+    rng = np.random.default_rng(seed + 1)
+    xstar = rng.normal(size=n)
+    b = band_matvec(band, jnp.asarray(xstar, jnp.float32))
+    return band, xstar, b
+
+
+def _recorded(history):
+    hist = np.asarray(history)
+    return hist[~np.isnan(hist)]
+
+
+# ---------------------------------------------------------------------------
+# lifecycle path (BiCGStab(2))
+# ---------------------------------------------------------------------------
+
+
+def test_history_length_and_nan_tail():
+    band, _, b = _system()
+    opts = SaPOptions(p=4, variant="C", tol=1e-8, maxiter=100)
+    fac = factor(plan_banded(band, opts))
+    res = fac.solve(b, record_history=True)
+    assert bool(res.converged)
+    hist = np.asarray(res.history)
+    assert hist.shape == (opts.maxiter,)
+    track = _recorded(res.history)
+    # one entry per completed sweep: ceil of the fractional iteration count
+    assert track.size == int(np.ceil(float(res.iterations)))
+    # the tail past the last sweep is entirely NaN padding
+    assert np.isnan(hist[track.size:]).all()
+    # the final recorded (preconditioned) residual is the converged one
+    assert track[-1] <= opts.tol
+    assert track[-1] == pytest.approx(float(res.resnorm), rel=1e-5, abs=1e-12)
+
+
+def test_history_default_is_none_and_pytree_unchanged():
+    band, _, b = _system()
+    opts = SaPOptions(p=4, variant="C", tol=1e-8, maxiter=100)
+    fac = factor(plan_banded(band, opts))
+    plain = fac.solve(b)
+    assert plain.history is None
+    # the default result pytree must not grow a new leaf (cache identity:
+    # record_history is a separate jit entry, the default one is untouched)
+    recorded = fac.solve(b, record_history=True)
+    plain_leaves = len(jax.tree_util.tree_leaves(plain))
+    assert len(jax.tree_util.tree_leaves(recorded)) == plain_leaves + 1
+    np.testing.assert_allclose(
+        np.asarray(plain.x), np.asarray(recorded.x), rtol=1e-6
+    )
+    assert float(plain.iterations) == float(recorded.iterations)
+
+
+def test_history_solve_many_parity():
+    band, _, b = _system()
+    opts = SaPOptions(p=4, variant="C", tol=1e-8, maxiter=100)
+    fac = factor(plan_banded(band, opts))
+    one = fac.solve(b, record_history=True)
+    many = fac.solve_many(jnp.stack([b, 2.0 * b], axis=1), record_history=True)
+    hist = np.asarray(many.history)
+    assert hist.shape == (2, opts.maxiter)
+    # column 0 is the same system: identical residual track
+    np.testing.assert_allclose(
+        hist[0], np.asarray(one.history), rtol=1e-5, equal_nan=True
+    )
+    # a scaled RHS converges along its own (relative) track too
+    assert _recorded(hist[1])[-1] <= opts.tol
+
+
+def test_history_decreases_on_dominant_system():
+    band, _, b = _system(d=1.5)
+    opts = SaPOptions(p=4, variant="C", tol=1e-8, maxiter=100)
+    fac = factor(plan_banded(band, opts))
+    track = _recorded(fac.solve(b, record_history=True).history)
+    assert track[-1] < track[0]
+
+
+# ---------------------------------------------------------------------------
+# raw Krylov drivers
+# ---------------------------------------------------------------------------
+
+
+def test_cg_history():
+    n = 64
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(n, n))
+    a = jnp.asarray(q @ q.T + n * np.eye(n), jnp.float32)
+    b = jnp.asarray(rng.normal(size=n), jnp.float32)
+    res = cg(lambda v: a @ v, b, tol=1e-6, maxiter=80, record_history=True)
+    assert bool(res.converged)
+    hist = np.asarray(res.history)
+    assert hist.shape == (80,)
+    track = _recorded(res.history)
+    assert track.size == int(float(res.iterations))
+    assert track[-1] <= 1e-6
+
+
+def test_bicgstab2_history_off_is_none():
+    n = 64
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(n, n)) + n * np.eye(n), jnp.float32)
+    b = jnp.asarray(rng.normal(size=n), jnp.float32)
+    res = bicgstab2(lambda v: a @ v, b, tol=1e-6, maxiter=50)
+    assert res.history is None
+    res_h = bicgstab2(
+        lambda v: a @ v, b, tol=1e-6, maxiter=50, record_history=True
+    )
+    assert res_h.history is not None
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(res_h.x))
+
+
+# ---------------------------------------------------------------------------
+# engine path (SaPOptions.record_history -> SolveOutcome.history)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_outcome_history():
+    opts = SaPOptions(
+        p=4, variant="C", tol=1e-6, maxiter=200, record_history=True
+    )
+    eng = SolverEngine(opts, max_batch=8)
+    for seed in range(3):
+        band = np.float32(random_banded(256, 4, d=1.1, seed=seed))
+        b = np.random.default_rng(seed).normal(size=256).astype(np.float32)
+        eng.submit_system(band, b)
+    done = eng.run_until_drained()
+    assert len(done) == 3
+    for r in done:
+        out = r.result
+        assert out.converged
+        assert out.history is not None and out.history.shape == (opts.maxiter,)
+        assert _recorded(out.history).size == int(np.ceil(out.iterations))
+
+
+def test_engine_history_default_off():
+    eng = SolverEngine(SaPOptions(p=4, variant="C", tol=1e-6), max_batch=8)
+    band = np.float32(random_banded(256, 4, d=1.1, seed=7))
+    b = np.random.default_rng(7).normal(size=256).astype(np.float32)
+    eng.submit_system(band, b)
+    (done,) = eng.run_until_drained()
+    assert done.result.history is None
