@@ -38,6 +38,7 @@ from repro.core import (  # noqa: E402
     plan_banded,
 )
 from repro.core.banded import band_matvec, random_banded  # noqa: E402
+from repro.obs.cost import solver_stage_costs  # noqa: E402
 from repro.serve import SolverEngine  # noqa: E402
 
 from benchmarks.common import (  # noqa: E402
@@ -60,6 +61,36 @@ def _fleet(s, n, k, d=1.0, seed=0):
         xs.append(x)
         bs.append(band_matvec(band, jnp.asarray(x, jnp.float32)))
     return bands, jnp.stack(bs), np.stack(xs)
+
+
+def _fleet_cost(tr, bpl, res, opts) -> dict | None:
+    """Per-stage cost records for one fleet/batched row.
+
+    Roofline predictions come from the bucket's AOT cost analysis
+    (:func:`repro.obs.cost.solver_stage_costs`); measured seconds come
+    from the traced pass's factor.batch / krylov spans, with the krylov
+    prediction rescaled from the lowered maxiter loop to the sweeps the
+    batch actually ran (a lockstep vmapped solve runs max(iterations)
+    sweeps for everyone).
+    """
+    try:
+        costs = solver_stage_costs(
+            (bpl.n, bpl.k, opts.p), s=bpl.s, opts=opts
+        )
+    except Exception:  # cost analysis must never sink the benchmark
+        return None
+    factor_s = sum(sp.duration_s for sp in tr.find("factor.batch"))
+    krylov_s = sum(sp.duration_s for sp in tr.find("krylov"))
+    sweeps = max(1, int(np.ceil(float(np.asarray(res.iterations).max()))))
+    out = {
+        "factor": costs["factor"].to_dict(measured_s=factor_s or None),
+        "krylov": costs["krylov"].per_iteration().scale(sweeps)
+        .to_dict(measured_s=krylov_s or None),
+    }
+    for sub in ("btf", "bts", "bcr"):  # kernel-level reference records
+        if sub in costs:
+            out[sub] = costs[sub].to_dict()
+    return out
 
 
 def bench_fleet(report: Report, smoke: bool = False):
@@ -89,7 +120,8 @@ def bench_fleet(report: Report, smoke: bool = False):
         # One traced pass (post-timing, so tracer overhead never pollutes
         # the us_per_call figures) to attribute wall time to stages.
         with report.tracing() as tr:
-            bfac = batch_factor(batch_plan(bands, opts))
+            bpl = batch_plan(bands, opts)
+            bfac = batch_factor(bpl)
             res = bfac.solve_batch(bmat)
             jax.block_until_ready(res.x)
         err = float(np.abs(np.asarray(res.x)[:, :n] - xs).max())
@@ -103,6 +135,7 @@ def bench_fleet(report: Report, smoke: bool = False):
             f"conv={bool(np.asarray(res.converged).all())};"
             f"true_res={true_res:.3e};tol={opts.tol:g}",
             stages=stage_fractions(tr),
+            cost=_fleet_cost(tr, bpl, res, opts),
         )
 
 
@@ -110,7 +143,8 @@ def bench_engine(report: Report, smoke: bool = False):
     """Serving path: heterogeneous fleet, repeated matrices, LRU cache."""
     n0, k0, steps, distinct = (256, 4, 3, 2) if smoke else (1024, 8, 8, 4)
     opts = SaPOptions(p=4, variant="C", tol=1e-6, maxiter=200)
-    eng = SolverEngine(opts, max_batch=32, cache_size=64)
+    eng = SolverEngine(opts, max_batch=32, cache_size=64,
+                       cost_accounting=True)
     rng = np.random.default_rng(3)
     mats = [
         np.float32(random_banded(n0 + 37 * i, k0 + (i % 2), d=1.1, seed=i))
@@ -135,7 +169,34 @@ def bench_engine(report: Report, smoke: bool = False):
         f"conv={conv};true_res={true_res:.3e};tol={opts.tol:g};"
         f"misconverged={eng.stats['misconverged']}",
         stages=stage_fractions(tr),
+        cost=_engine_cost(eng),
     )
+
+
+def _engine_cost(eng: SolverEngine) -> dict | None:
+    """Fold the engine's accumulated cost totals into per-stage records.
+
+    Measured seconds are the engine's own stage accounting
+    (factor_seconds_total / solve_seconds_total); predictions are the
+    roofline totals the engine accrued per step (S=1 linear-scaling
+    factor model, sweeps x batch krylov model).
+    """
+    totals = eng.cost_snapshot()
+    if not totals:
+        return None
+    measured = {
+        "factor": eng.stats["factor_seconds_total"],
+        "krylov": eng.stats["solve_seconds_total"],
+    }
+    out = {}
+    for stage, t in totals.items():
+        rec = dict(t)
+        m = measured.get(stage)
+        if m:
+            rec["measured_s"] = round(m, 6)
+            rec["roofline_frac"] = round(t["roofline_s"] / m, 6)
+        out[stage] = rec
+    return out
 
 
 def run(report: Report, smoke: bool = False):

@@ -1,0 +1,131 @@
+"""Perf-regression gate over the bench trajectory.
+
+Compares each row of the given BENCH_*.json run documents against the
+median of its matched baselines in BENCH_history.jsonl -- same bench,
+same row name, same :func:`benchmarks.trajectory.platform_key`, same
+smoke flag, recorded after the last covering bless marker -- and fails
+when the current ``us_per_call`` exceeds ``tolerance x`` that median.
+
+Rows with no matched baseline are *skipped*, not failed: a fresh
+platform (or a brand-new bench row) has nothing to regress against and
+starts accruing history instead.  Only slowdowns gate; a speedup just
+prints.  Intentional regressions (e.g. trading speed for accuracy) are
+accepted by appending a bless marker::
+
+    python -m benchmarks.trajectory bless --history BENCH_history.jsonl \
+        --note "why this slowdown is intended"
+
+Exit status 1 on any regression, 0 otherwise -- wired into the CI
+bench-smoke job after the smoke benches write their run docs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+from pathlib import Path
+
+from benchmarks.trajectory import (
+    baseline_records,
+    history_records,
+    load_history,
+)
+
+# Default gate: 1.5x the baseline median.  CI passes a looser value
+# (shared runners have real multi-x wall-clock variance); a dedicated
+# perf box can tighten it.
+DEFAULT_TOLERANCE = 1.5
+
+
+class RegressionError(AssertionError):
+    """A bench row ran slower than tolerance x its baseline median."""
+
+
+def check_doc(doc: dict, history: list[dict],
+              tolerance: float = DEFAULT_TOLERANCE) -> list[dict]:
+    """Check one run document; returns per-row verdicts.
+
+    Each verdict: {bench, row, platform, status, us_per_call,
+    [baseline_us, ratio, n_baseline]} with status one of "ok",
+    "regression", "no-baseline".
+    """
+    verdicts = []
+    for rec in history_records(doc):
+        base = baseline_records(history, rec["bench"], rec["row"],
+                                rec["platform"], rec["smoke"])
+        v = {"bench": rec["bench"], "row": rec["row"],
+             "platform": rec["platform"], "us_per_call": rec["us_per_call"]}
+        if not base:
+            v["status"] = "no-baseline"
+            verdicts.append(v)
+            continue
+        baseline_us = statistics.median(r["us_per_call"] for r in base)
+        ratio = (rec["us_per_call"] / baseline_us if baseline_us > 0
+                 else float("inf"))
+        v.update(baseline_us=round(baseline_us, 1),
+                 ratio=round(ratio, 3), n_baseline=len(base))
+        v["status"] = "regression" if ratio > tolerance else "ok"
+        verdicts.append(v)
+    return verdicts
+
+
+def check(docs, history_path,
+          tolerance: float = DEFAULT_TOLERANCE) -> list[dict]:
+    """Check run docs (dicts or paths) against a history file.
+
+    Raises :class:`RegressionError` naming every offending row; returns
+    the full verdict list otherwise.
+    """
+    history = load_history(history_path)
+    verdicts = []
+    for doc in docs:
+        if not isinstance(doc, dict):
+            doc = json.loads(Path(doc).read_text())
+        verdicts.extend(check_doc(doc, history, tolerance))
+    bad = [v for v in verdicts if v["status"] == "regression"]
+    if bad:
+        lines = [
+            f"  {v['bench']}/{v['row']} [{v['platform']}]: "
+            f"{v['us_per_call']:.1f}us vs baseline "
+            f"{v['baseline_us']:.1f}us (x{v['ratio']:.2f} > "
+            f"tolerance x{tolerance:.2f}, n={v['n_baseline']})"
+            for v in bad
+        ]
+        raise RegressionError(
+            f"{len(bad)} bench row(s) regressed beyond tolerance "
+            f"x{tolerance:.2f}:\n" + "\n".join(lines)
+            + "\n(intentional? bless with: python -m benchmarks.trajectory"
+              " bless --history <file> --note '<why>')"
+        )
+    return verdicts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("docs", nargs="+", help="current BENCH_*.json run docs")
+    ap.add_argument("--history", default="BENCH_history.jsonl")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="fail when us_per_call > tolerance * baseline "
+                         f"median (default {DEFAULT_TOLERANCE})")
+    args = ap.parse_args(argv)
+    try:
+        verdicts = check(args.docs, args.history, args.tolerance)
+    except RegressionError as err:
+        print(f"FAIL: {err}")
+        return 1
+    for v in verdicts:
+        if v["status"] == "no-baseline":
+            print(f"skip {v['bench']}/{v['row']} [{v['platform']}]: "
+                  f"no matched baseline ({v['us_per_call']:.1f}us recorded)")
+        else:
+            print(f"ok   {v['bench']}/{v['row']}: {v['us_per_call']:.1f}us "
+                  f"vs {v['baseline_us']:.1f}us baseline "
+                  f"(x{v['ratio']:.2f}, n={v['n_baseline']})")
+    print(f"regression gate passed ({len(verdicts)} rows, "
+          f"tolerance x{args.tolerance:.2f})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

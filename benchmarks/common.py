@@ -89,13 +89,15 @@ class Report:
         self.records = []
 
     def add(self, name: str, us_per_call: float, derived: str = "",
-            stages: dict | None = None):
+            stages: dict | None = None, cost: dict | None = None):
         row = f"{name},{us_per_call:.1f},{derived}"
         self.rows.append(row)
         rec = {"name": name, "us_per_call": round(us_per_call, 1),
                "derived": _parse_derived(derived)}
         if stages:
             rec["stages"] = stages
+        if cost:
+            rec["cost"] = cost
         self.records.append(rec)
         print(row, flush=True)
 

@@ -1,9 +1,19 @@
-"""Assemble the roofline report from results/dryrun/*.json.
+"""Assemble roofline reports: dry-run sweep tables + solver cost tables.
 
-Produces the markdown tables for EXPERIMENTS.md (section Dry-run and
-section Roofline) and prints cell summaries.  The roofline table is
-single-pod (per the assignment); the multi-pod columns prove pod-axis
-sharding (collective schedule includes cross-pod traffic).
+Two sources, one renderer:
+
+  * ``results/dryrun/*.json`` (from benchmarks/dryrun_sweep.py) -- the
+    markdown tables for EXPERIMENTS.md (``--table roofline`` /
+    ``--table dryrun``).  The results directory is a flag now
+    (``--results-dir``), not a hard-coded path, so sweeps written
+    anywhere (CI artifacts, scratch dirs) render the same.
+  * a ``BENCH_batched.json`` run document (``--bench``) -- the per-stage
+    solver cost table: HLO-derived flops / HBM bytes / arithmetic
+    intensity, the roofline-predicted seconds, and the achieved
+    roofline fraction for rows that carry measured wall time (the
+    ``cost`` records attached by benchmarks/bench_batched.py).
+
+``--out FILE`` writes the rendered markdown instead of printing it.
 """
 
 from __future__ import annotations
@@ -13,12 +23,12 @@ import json
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
-RESULTS = REPO / "results" / "dryrun"
+DEFAULT_RESULTS = REPO / "results" / "dryrun"
 
 
-def load(mesh: str):
+def load(results_dir: Path, mesh: str):
     rows = []
-    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+    for f in sorted(Path(results_dir).glob(f"*__{mesh}.json")):
         rows.append(json.loads(f.read_text()))
     return rows
 
@@ -89,16 +99,73 @@ def dryrun_table(rows):
     return hdr + "\n".join(lines)
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def cost_table(doc: dict) -> str:
+    """Per-stage solver cost table from a BENCH_batched.json document."""
+    hw = "?"
+    hdr = (
+        "| row | stage | flops | HBM bytes | intensity | roofline | "
+        "measured | achieved | bound |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for row in doc.get("rows", []):
+        for stage, c in (row.get("cost") or {}).items():
+            hw = c.get("hw", hw)
+            intensity = c.get("intensity")
+            measured = c.get("measured_s")
+            frac = c.get("roofline_frac")
+            lines.append(
+                f"| {row['name']} | {stage} | {c['flops']:.3g} | "
+                f"{fmt_b(c['hbm_bytes'])} | "
+                + (f"{intensity:.2f}" if intensity is not None else "-")
+                + f" | {fmt_s(c['roofline_s'])} | "
+                + (fmt_s(measured) if measured else "-")
+                + " | "
+                + (f"{frac:.1%}" if frac is not None else "-")
+                + f" | {c.get('bottleneck', '-')} |"
+            )
+    if not lines:
+        return ("no `cost` records in this run document -- rerun "
+                "benchmarks/bench_batched.py from a build with the cost "
+                "observatory (repro.obs.cost)\n")
+    title = (f"Per-stage solver cost ({doc.get('bench', '?')}, "
+             f"hardware model `{hw}`, achieved = roofline_s / measured_s)\n\n")
+    return title + hdr + "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--mesh", default="single")
-    ap.add_argument("--table", default="roofline", choices=["roofline", "dryrun"])
-    args = ap.parse_args()
-    rows = load(args.mesh)
-    if args.table == "roofline":
-        print(roofline_table(rows))
+    ap.add_argument("--table", default="roofline",
+                    choices=["roofline", "dryrun"])
+    ap.add_argument("--results-dir", default=str(DEFAULT_RESULTS),
+                    help="dry-run sweep results directory "
+                         "(default: <repo>/results/dryrun)")
+    ap.add_argument("--bench", default=None,
+                    help="render the per-stage cost table from this "
+                         "BENCH_batched.json instead of the sweep tables")
+    ap.add_argument("--out", default=None,
+                    help="write the rendered markdown here instead of stdout")
+    args = ap.parse_args(argv)
+    if args.bench:
+        text = cost_table(json.loads(Path(args.bench).read_text()))
     else:
-        print(dryrun_table(rows))
+        results_dir = Path(args.results_dir)
+        if not results_dir.exists():
+            text = (f"no results under {results_dir} -- run "
+                    "benchmarks/dryrun_sweep.py first (or pass "
+                    "--results-dir)\n")
+        else:
+            rows = load(results_dir, args.mesh)
+            table = roofline_table if args.table == "roofline" else dryrun_table
+            text = table(rows)
+    if args.out:
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(text if text.endswith("\n") else text + "\n")
+        print(f"wrote {out}")
+    else:
+        print(text)
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from benchmarks.common import Report, TracedReport, repo_root_default  # noqa: E402
+from benchmarks.trajectory import append_history  # noqa: E402
 
 
 def main() -> None:
@@ -20,29 +21,35 @@ def main() -> None:
 
     report = Report()
     out = repo_root_default()  # committed trajectory files live at the root
+    history = out / "BENCH_history.jsonl"  # append-only perf trajectory
     print("name,us_per_call,derived", flush=True)
 
     # bench_solver and bench_batched track the cross-PR perf trajectory:
-    # their rows also land in machine-readable BENCH_*.json files.
+    # their rows also land in machine-readable BENCH_*.json files and the
+    # append-only BENCH_history.jsonl that feeds the regression gate
+    # (benchmarks/check_regression.py).
     from benchmarks import bench_solver  # noqa: E402
 
     solver_report = TracedReport("solver")
     bench_solver.run(solver_report)
-    solver_report.write_json(out / "BENCH_solver.json")
+    append_history(solver_report.write_json(out / "BENCH_solver.json"),
+                   history)
     jax.clear_caches()
 
     from benchmarks import bench_batched  # noqa: E402
 
     batched_report = TracedReport("batched")
     bench_batched.run(batched_report)
-    batched_report.write_json(out / "BENCH_batched.json")
+    append_history(batched_report.write_json(out / "BENCH_batched.json"),
+                   history)
     jax.clear_caches()
 
     from benchmarks import bench_serve  # noqa: E402
 
     serve_report = Report("serve")
     bench_serve.run(serve_report)
-    serve_report.write_json(out / "BENCH_serve.json")
+    append_history(serve_report.write_json(out / "BENCH_serve.json"),
+                   history)
     jax.clear_caches()
 
     from benchmarks import bench_reorder  # noqa: E402

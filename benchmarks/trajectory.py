@@ -1,0 +1,179 @@
+"""Append-only bench trajectory: BENCH_history.jsonl + baselines.
+
+The BENCH_*.json files each hold ONE run.  This module folds them into a
+durable, append-only JSONL history so the perf trajectory across commits
+is queryable: one record per (bench, row) per run, keyed by a platform
+string, plus *bless markers* that reset the regression baseline after an
+intentional perf change.
+
+Record shapes (one JSON object per line):
+
+  data row   {"bench", "row", "platform", "unix_time", "us_per_call",
+              "smoke": bool}
+  bless mark {"bless": true, "unix_time", "note", ["bench"], ["row"]}
+
+A bless marker without ``bench``/``row`` covers everything; with them it
+covers only the matching rows.  :func:`baseline_records` returns the data
+rows *after* the last covering bless marker, which is what
+``benchmarks.check_regression`` compares against.
+
+CLI::
+
+    python -m benchmarks.trajectory append BENCH_batched.json \
+        --history BENCH_history.jsonl
+    python -m benchmarks.trajectory bless --history BENCH_history.jsonl \
+        --note "batched factor now AOT-cached"
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def platform_key(platform: dict) -> str:
+    """Collapse a BENCH_*.json platform dict to a comparable key.
+
+    Timings are only comparable on like hardware: backend (cpu/gpu/tpu),
+    machine architecture, and device count.  Python/jax versions are
+    deliberately excluded -- version bumps should not orphan the
+    baseline; a real perf regression from an upgrade *should* trip the
+    gate.
+    """
+    return (
+        f"{platform.get('backend', '?')}/{platform.get('machine', '?')}"
+        f"/d{platform.get('device_count', 1)}"
+    )
+
+
+def history_records(doc: dict) -> list[dict]:
+    """Flatten one BENCH_*.json document into history data rows."""
+    key = platform_key(doc.get("platform", {}))
+    smoke = bool(doc.get("meta", {}).get("smoke", False))
+    out = []
+    for row in doc.get("rows", []):
+        out.append({
+            "bench": doc.get("bench", "?"),
+            "row": row["name"],
+            "platform": key,
+            "unix_time": doc.get("unix_time", 0),
+            "us_per_call": row["us_per_call"],
+            "smoke": smoke,
+        })
+    return out
+
+
+def append_history(doc, history_path) -> int:
+    """Append one BENCH doc (dict or path to json) to the history file.
+
+    Returns the number of rows appended.  Creation is implicit; appends
+    are line-atomic enough for the single-writer CI/bench use.
+    """
+    if not isinstance(doc, dict):
+        doc = json.loads(Path(doc).read_text())
+    recs = history_records(doc)
+    path = Path(history_path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with path.open("a") as fh:
+        for rec in recs:
+            fh.write(json.dumps(rec, sort_keys=True) + "\n")
+    return len(recs)
+
+
+def append_bless(history_path, note: str = "", bench: str | None = None,
+                 row: str | None = None, unix_time: int | None = None) -> None:
+    """Append a bless marker: baselines before it stop counting."""
+    mark: dict = {"bless": True,
+                  "unix_time": int(time.time()) if unix_time is None
+                  else unix_time}
+    if note:
+        mark["note"] = note
+    if bench:
+        mark["bench"] = bench
+    if row:
+        mark["row"] = row
+    path = Path(history_path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with path.open("a") as fh:
+        fh.write(json.dumps(mark, sort_keys=True) + "\n")
+
+
+def load_history(path) -> list[dict]:
+    """Read every record (data rows and bless markers), skipping blank
+    and malformed lines rather than dying on a torn append."""
+    path = Path(path)
+    if not path.exists():
+        return []
+    out = []
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            continue
+    return out
+
+
+def _covers(mark: dict, bench: str, row: str) -> bool:
+    if mark.get("bench") not in (None, bench):
+        return False
+    return mark.get("row") in (None, row)
+
+
+def baseline_records(history: list[dict], bench: str, row: str,
+                     platform: str, smoke: bool) -> list[dict]:
+    """Matching data rows after the last covering bless marker.
+
+    File order is append order, so "after the last bless" is a simple
+    scan: a covering marker clears the matches collected so far.
+    """
+    out: list[dict] = []
+    for rec in history:
+        if rec.get("bless"):
+            if _covers(rec, bench, row):
+                out.clear()
+            continue
+        if (rec.get("bench") == bench and rec.get("row") == row
+                and rec.get("platform") == platform
+                and bool(rec.get("smoke", False)) == smoke):
+            out.append(rec)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    ap_append = sub.add_parser("append", help="fold BENCH_*.json docs in")
+    ap_append.add_argument("docs", nargs="+", help="BENCH_*.json paths")
+    ap_append.add_argument("--history", default="BENCH_history.jsonl")
+
+    ap_bless = sub.add_parser(
+        "bless", help="reset the regression baseline from here on")
+    ap_bless.add_argument("--history", default="BENCH_history.jsonl")
+    ap_bless.add_argument("--note", default="")
+    ap_bless.add_argument("--bench", default=None)
+    ap_bless.add_argument("--row", default=None)
+
+    args = ap.parse_args(argv)
+    if args.cmd == "append":
+        total = 0
+        for doc in args.docs:
+            n = append_history(doc, args.history)
+            print(f"appended {n} rows from {doc} -> {args.history}")
+            total += n
+        return 0 if total else 1
+    append_bless(args.history, note=args.note, bench=args.bench,
+                 row=args.row)
+    print(f"blessed {args.history}"
+          + (f" (bench={args.bench} row={args.row})"
+             if args.bench or args.row else " (all rows)"))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -57,6 +57,11 @@ class SolverConfig:
     # a tight latency envelope narrows these to get p99 resolution where
     # its traffic actually lands.
     hist_bounds: tuple[float, ...] | None = None
+    # roofline cost accounting (repro.obs.cost): per-bucket flops/bytes/
+    # roofline-seconds attribution on the engine, one extra S=1 lowering
+    # per bucket the first time it is seen.  Off by default -- serving
+    # deployments that dashboard achieved-vs-roofline turn it on.
+    cost_accounting: bool = False
 
     def to_sap_options(self, p: int):
         """Map this workload config onto single-device solver options (the
@@ -82,6 +87,7 @@ class SolverConfig:
             max_batch=self.max_batch,
             cache_size=self.fac_cache,
             rounding=self.bucket_rounding,
+            cost_accounting=self.cost_accounting,
         )
 
     def to_service(self, p: int, start: bool = True):
@@ -100,6 +106,7 @@ class SolverConfig:
             thrash_window=self.thrash_window,
             thrash_ratio=self.thrash_ratio,
             hist_bounds=self.hist_bounds,
+            cost_accounting=self.cost_accounting,
             start=start,
         )
 

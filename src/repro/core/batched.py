@@ -48,6 +48,8 @@ factored systems inside one batched solve.
 from __future__ import annotations
 
 import dataclasses
+import threading
+from collections import OrderedDict
 from functools import lru_cache, partial
 from typing import List, Optional, Sequence, Tuple
 
@@ -55,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.cost import timed_compile
 from ..obs.trace import span
 from .banded import band_to_block_tridiag, diag_dominance_factor
 from .operators import BandedOperator
@@ -500,6 +503,52 @@ def _factor_stages_fn(k: int, p: int, variant: str, opts_key: tuple):
     return jax.jit(jax.vmap(stages))
 
 
+# AOT-compiled factor-stage executables, keyed by (bucket, variant, factor
+# options, exact input aval).  One compile per key serves execution
+# (batch_factor), the compile-telemetry counters, AND the cost observatory
+# (repro.obs.cost reads flops/bytes off the same executable via
+# cost_analysis() / as_text()) -- a jit-path re-trace would pay the
+# compile twice.  Bounded like _factor_stages_fn; evicted executables
+# simply recompile on next use.
+_STAGES_EXEC: OrderedDict = OrderedDict()
+_STAGES_EXEC_LOCK = threading.Lock()
+_STAGES_EXEC_CAP = 64
+
+
+def factor_stages_compiled(k: int, p: int, variant: str, opts_key: tuple,
+                           bands_aval):
+    """AOT-compiled vmapped factor stages for one exact batch shape.
+
+    ``bands_aval`` is anything with ``.shape``/``.dtype`` for the stacked
+    (S, N', 2K'+1) bands -- a concrete array or a
+    ``jax.ShapeDtypeStruct``.  Compile misses are counted and spanned via
+    :func:`repro.obs.cost.timed_compile` under the ``factor.batch``
+    label.
+    """
+    akey = (tuple(bands_aval.shape), jnp.dtype(bands_aval.dtype).name)
+    ckey = (k, p, variant, opts_key, akey)
+    with _STAGES_EXEC_LOCK:
+        hit = _STAGES_EXEC.get(ckey)
+        if hit is not None:
+            _STAGES_EXEC.move_to_end(ckey)
+            return hit
+    stages = _factor_stages_fn(k, p, variant, opts_key)
+    struct = jax.ShapeDtypeStruct(tuple(bands_aval.shape),
+                                  jnp.dtype(bands_aval.dtype))
+    lowered = stages.lower(struct)
+    with timed_compile(
+        "factor.batch", bucket=f"{struct.shape[1]}x{k}", s=struct.shape[0]
+    ):
+        compiled = lowered.compile()
+    with _STAGES_EXEC_LOCK:
+        # a racing thread may have compiled the same key; first in wins
+        hit = _STAGES_EXEC.setdefault(ckey, compiled)
+        _STAGES_EXEC.move_to_end(ckey)
+        while len(_STAGES_EXEC) > _STAGES_EXEC_CAP:
+            _STAGES_EXEC.popitem(last=False)
+        return hit
+
+
 def _stacked_permutations(bpl: BatchedSaPPlan):
     """Per-system contiguous<->padded row maps as stacked (S, N') leaves.
 
@@ -541,8 +590,10 @@ def batch_factor(bpl: BatchedSaPPlan) -> BatchedSaPFactorization:
     with span(
         "factor.batch", s=bpl.s, n=bpl.n, k=bpl.k, p=opts.p, variant=variant
     ) as sp:
-        stages = _factor_stages_fn(bpl.k, opts.p, variant, _factor_key(opts))
-        pcs, d_factors = stages(bpl.bands)
+        compiled = factor_stages_compiled(
+            bpl.k, opts.p, variant, _factor_key(opts), bpl.bands
+        )
+        pcs, d_factors = compiled(jnp.asarray(bpl.bands))
         sp.sync(pcs)
     x_perm, b_perm = _stacked_permutations(bpl)
     fac = SaPFactorization(

@@ -189,6 +189,45 @@ def bcr_solve(
 
 
 # ---------------------------------------------------------------------------
+# Analytic FLOP models (the cost observatory's sanity anchors)
+# ---------------------------------------------------------------------------
+#
+# Leading-order algebraic flop counts of the solver kernels above, used by
+# repro.obs.cost tests to keep the HLO-derived counters honest: the HLO
+# walk counts every lowered elementwise op (selects, boosts, masks), so it
+# lands above these, but only by a bounded constant factor -- a blown-up
+# ratio means the analyzer (or the kernel) regressed.
+
+
+def gj_inverse_flops(k: int) -> float:
+    """Gauss-Jordan inverse of one KxK block: ~2 K^3 multiply-adds."""
+    return 2.0 * k**3
+
+
+def btf_flops(p: int, m: int, k: int) -> float:
+    """Block-tridiag factor of P chains of M KxK blocks.
+
+    Per interior block: one Schur-pivot inverse (2 K^3), the elimination
+    product ``l = e @ sinv`` (2 K^3), and the Schur update ``d - l @ f``
+    (2 K^3 + K^2).
+    """
+    return float(p) * m * (gj_inverse_flops(k) + 4.0 * k**3 + k * k)
+
+
+def bts_flops(p: int, m: int, k: int, r: int = 1) -> float:
+    """Block-tridiag solve: forward + backward sweeps, three K x K block
+    mat-vecs (2 K^2 R each) per block per sweep pair."""
+    return float(p) * m * 6.0 * k * k * r
+
+
+def bcr_flops(m: int, k: int) -> float:
+    """Cyclic reduction over a chain of M KxK blocks: ~M eliminated nodes
+    across the log2(M) levels, each paying one inverse (2 K^3) and four
+    update products (2 K^3 each)."""
+    return float(m) * 10.0 * k**3
+
+
+# ---------------------------------------------------------------------------
 # Sequence-mixing recurrences (flattened over batch x heads)
 # ---------------------------------------------------------------------------
 

@@ -26,6 +26,44 @@ PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link
 
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Peak rates of one chip, the two roofline ceilings.
+
+    ``peak_flops`` and ``hbm_bw`` bound the compute and memory terms of a
+    stage's roofline time (``max(flops / peak_flops, bytes / hbm_bw)``).
+    The per-backend defaults below are deliberately *nominal* -- the cpu
+    entry in particular is a placeholder order of magnitude, not a
+    measured machine -- because the cost observatory uses them for
+    relative achieved-vs-roofline fractions along one trajectory, where a
+    constant scale error cancels.  Deployments that care about absolute
+    fractions override via ``REPRO_PEAK_FLOPS`` / ``REPRO_HBM_BW`` (see
+    :func:`repro.obs.cost.hardware_spec`).
+    """
+
+    name: str
+    peak_flops: float  # flops/s
+    hbm_bw: float  # bytes/s
+
+
+BACKEND_SPECS = {
+    # TPU v5e: the assignment's numbers (same constants as the module
+    # globals the dry-run roofline uses).
+    "tpu": HardwareSpec("tpu-v5e", PEAK_FLOPS, HBM_BW),
+    # A100-40GB-class: 19.5 TF/s f32 tensor, 1.55 TB/s HBM2e.
+    "gpu": HardwareSpec("gpu-a100", 19.5e12, 1.555e12),
+    # Nominal server-CPU core-count-ish envelope: ~100 GFLOP/s sustained
+    # f32, ~50 GB/s memory stream.  Placeholder -- see HardwareSpec.
+    "cpu": HardwareSpec("cpu-nominal", 1e11, 5e10),
+}
+
+
+def backend_spec(backend: str) -> HardwareSpec:
+    """Per-backend peak rates (falls back to the cpu placeholder)."""
+    return BACKEND_SPECS.get(backend, BACKEND_SPECS["cpu"])
+
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
     "s16": 2, "u16": 2, "f16": 2, "bf16": 2,

@@ -1,5 +1,17 @@
-"""Observability: lifecycle tracing, stage trees, Chrome/Perfetto export."""
+"""Observability: lifecycle tracing, roofline cost accounting, telemetry."""
 
+from .cost import (
+    COMPILES,
+    CompileLog,
+    StageCost,
+    cost_of,
+    cost_of_compiled,
+    device_memory_bytes,
+    hardware_spec,
+    install_compile_listener,
+    solver_stage_costs,
+    timed_compile,
+)
 from .trace import (
     NULL_SPAN,
     Span,
@@ -11,11 +23,21 @@ from .trace import (
 )
 
 __all__ = [
+    "COMPILES",
+    "CompileLog",
     "NULL_SPAN",
     "Span",
+    "StageCost",
     "Tracer",
+    "cost_of",
+    "cost_of_compiled",
+    "device_memory_bytes",
     "get_tracer",
+    "hardware_spec",
+    "install_compile_listener",
     "record",
+    "solver_stage_costs",
     "span",
+    "timed_compile",
     "use_tracer",
 ]

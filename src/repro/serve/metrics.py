@@ -71,6 +71,13 @@ class Gauge:
         with self._lock:
             self._value -= n
 
+    def set_max(self, v: float) -> None:
+        """Raise the gauge to ``v`` if higher (watermark semantics)."""
+        v = float(v)
+        with self._lock:
+            if v > self._value:
+                self._value = v
+
     @property
     def value(self) -> float:
         with self._lock:

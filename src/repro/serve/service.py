@@ -238,12 +238,13 @@ class AsyncSolverService:
         class_overrides: Optional[Dict[str, SaPOptions]] = None,
         metrics: Optional[MetricsRegistry] = None,
         hist_bounds: Optional[Tuple[float, ...]] = None,
+        cost_accounting: bool = False,
         start: bool = True,
     ):
         base = opts or SaPOptions()
         self.engine = SolverEngine(
             base, max_batch=max_batch, cache_size=cache_size,
-            rounding=rounding,
+            rounding=rounding, cost_accounting=cost_accounting,
         )
         self.max_batch = max_batch
         self.rounding = rounding
@@ -280,10 +281,18 @@ class AsyncSolverService:
         # exact-bucket escalation re-solves the engine ran in response
         self._m_misconverged = m.counter("misconverged_total")
         self._m_escalations = m.counter("escalations")
+        # compile churn + memory pressure (repro.obs.cost telemetry): the
+        # counters are synced by delta from the process-wide CompileLog at
+        # the end of every drain, so the exposition names come out as the
+        # conventional recompiles_total / compile_seconds_total.
+        self._m_recompiles = m.counter("recompiles")
+        self._m_compile_s = m.counter("compile_seconds")
+        self._m_peak_bytes = m.gauge("peak_device_bytes")
         self._m_depth = m.histogram("queue_depth", depth)
         self._m_wait = m.histogram("time_in_queue_s", hist_bounds)
         self._m_occ = m.histogram("batch_occupancy", occupancy)
         self._m_pending = m.gauge("pending_now")
+        self._compiles_seen = self.engine._compiles0
 
         # scheduling state: (bucket, dclass) -> [tickets]; one condition
         # variable serves submitters (backpressure) and the drain thread.
@@ -527,6 +536,7 @@ class AsyncSolverService:
             self._m_escalations.inc(esc)
         self._m_occ.observe(len(tickets) / self.max_batch)
         self._check_thrash()
+        self._sync_cost_metrics()
         return len(tickets)
 
     def _drain_loop(self) -> None:
@@ -561,6 +571,25 @@ class AsyncSolverService:
                 if self.rounding == "exact":
                     self.rounding = "pow2"
                     self._m_widened.inc()
+
+    def _sync_cost_metrics(self) -> None:
+        """Fold compile-telemetry deltas and the engine's device-memory
+        watermark into the registry (end of every drain).  Counter deltas
+        come from the process-wide :data:`repro.obs.cost.COMPILES` log, so
+        the service sees compiles wherever they happen -- the engine's AOT
+        factor cache, the cost layer, or plain jit cache misses."""
+        from repro.obs.cost import COMPILES
+
+        count, seconds = COMPILES.totals()
+        c0, s0 = self._compiles_seen
+        if count > c0:
+            self._m_recompiles.inc(count - c0)
+        if seconds > s0:
+            self._m_compile_s.inc(seconds - s0)
+        self._compiles_seen = (count, seconds)
+        self._m_peak_bytes.set_max(
+            self.engine.stats_snapshot()["peak_device_bytes"]
+        )
 
     # -- observability ------------------------------------------------------
 

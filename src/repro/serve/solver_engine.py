@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core import batched
 from repro.core.sap import SaPOptions, resolve_variant
+from repro.obs import cost as obs_cost
 from repro.obs.trace import span
 
 
@@ -147,6 +148,13 @@ class SolverEngine:
     max_batch  : per-step batch-size cap (one bucket per step)
     cache_size : LRU capacity in cached factorizations
     rounding   : bucket rounding policy ("pow2" | "exact")
+    cost_accounting : also attribute roofline-predicted flops/bytes/
+                 seconds to every step (:mod:`repro.obs.cost`).  Each
+                 bucket pays one extra S=1 lowering the first time it is
+                 seen; per-batch accounting then scales the S=1 stage
+                 costs linearly by batch size (and the Krylov cost by the
+                 sweeps the batch actually ran), so the accumulated
+                 ``roofline_*`` totals are a model, not a measurement.
     """
 
     def __init__(
@@ -155,11 +163,20 @@ class SolverEngine:
         max_batch: int = 32,
         cache_size: int = 128,
         rounding: str = "pow2",
+        cost_accounting: bool = False,
     ):
         self.opts = opts or SaPOptions()
         self.max_batch = max_batch
         self.cache_size = cache_size
         self.rounding = rounding
+        self.cost_accounting = cost_accounting
+        # compile totals are process-wide; remember the engine's epoch so
+        # stats_snapshot reports compiles attributable to this engine's
+        # lifetime (still process-wide within it: concurrent engines share
+        # the XLA compile cache anyway).
+        self._compiles0 = obs_cost.COMPILES.totals()
+        # accumulated roofline predictions per stage (cost_accounting on)
+        self._cost_totals: dict = {}
         self.queue: Deque[SolveRequest] = deque()
         self._next_rid = 0
         # (fingerprint, bucket, opts-sig) -> single-system factorization
@@ -188,6 +205,9 @@ class SolverEngine:
             "factor_seconds_total": 0.0,
             "solve_seconds_total": 0.0,
             "solve_seconds": 0.0,
+            # high-water mark of device memory sampled once per step
+            # (allocator stats where available, live-array bytes on CPU)
+            "peak_device_bytes": 0,
         }
 
     # -- submission ---------------------------------------------------------
@@ -312,6 +332,16 @@ class SolverEngine:
                     escalations=sum(1 for r in out if r.result.escalated),
                     fingerprints=[r.fingerprint[:8] for r in out[:8]],
                 )
+                if self.cost_accounting:
+                    try:
+                        costs = self.stage_costs(
+                            bucket, variant=out[0].result.variant
+                        )
+                        sp.annotate(
+                            cost={n: c.to_dict() for n, c in costs.items()}
+                        )
+                    except Exception:  # cost model must never fail a solve
+                        pass
         return out
 
     def _solve_prepared_impl(
@@ -423,12 +453,18 @@ class SolverEngine:
                 history=hists[i] if hists is not None else None,
             )
         dt = time.perf_counter() - t0
+        mem = obs_cost.device_memory_bytes()
         with self._lock:
             self.stats["solved"] += len(batch)
             self.stats["steps"] += 1
             self.stats["factor_seconds_total"] += t_factor
             self.stats["solve_seconds_total"] += dt - t_factor
             self.stats["solve_seconds"] += dt
+            if mem > self.stats["peak_device_bytes"]:
+                self.stats["peak_device_bytes"] = mem
+
+        if self.cost_accounting:
+            self._account_cost(bucket, eff, len(batch), len(miss_reqs), iters)
 
         mis = [r for r in batch if r.result.misconverged]
         if mis:
@@ -502,12 +538,73 @@ class SolverEngine:
             warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return done
 
+    # -- cost accounting ----------------------------------------------------
+
+    def stage_costs(
+        self,
+        bucket: Tuple[int, int, int],
+        s: int = 1,
+        variant: Optional[str] = None,
+        opts: Optional[SaPOptions] = None,
+    ) -> dict:
+        """Per-stage roofline costs for one bucket (cached after first use).
+
+        Thin wrapper over :func:`repro.obs.cost.solver_stage_costs` that
+        defaults to the engine's own options and resolved variant; the
+        returned dict maps stage name -> :class:`repro.obs.cost.StageCost`.
+        """
+        with self._lock:
+            eff = opts or self.opts
+        if variant is None:
+            variant = eff.variant if eff.variant != "auto" else "C"
+        return obs_cost.solver_stage_costs(
+            bucket, s=s, opts=eff, variant=variant
+        )
+
+    def _account_cost(self, bucket, eff, batch_len, n_factored, iters) -> None:
+        """Fold one step's roofline predictions into the running totals.
+
+        The S=1 stage costs scale linearly by batch size; the Krylov cost
+        is per-sweep x the sweeps the (lockstep vmapped) batch actually
+        ran -- i.e. the max iteration count in the batch.
+        """
+        try:
+            costs = self.stage_costs(bucket, variant=eff.variant, opts=eff)
+        except Exception:  # cost model must never fail a solve
+            return
+        sweeps = float(np.max(iters)) if np.size(iters) else 0.0
+        preds = {
+            "factor": costs["factor"].scale(float(n_factored)),
+            "krylov": costs["krylov"].per_iteration().scale(
+                sweeps * batch_len
+            ),
+        }
+        with self._lock:
+            for name, c in preds.items():
+                ent = self._cost_totals.setdefault(
+                    name, {"flops": 0.0, "hbm_bytes": 0.0, "roofline_s": 0.0}
+                )
+                ent["flops"] += c.flops
+                ent["hbm_bytes"] += c.hbm_bytes
+                ent["roofline_s"] += c.roofline_s
+
+    def cost_snapshot(self) -> dict:
+        """Accumulated per-stage roofline predictions (cost_accounting)."""
+        with self._lock:
+            return {k: dict(v) for k, v in self._cost_totals.items()}
+
     # -- derived stats ------------------------------------------------------
 
     def stats_snapshot(self) -> dict:
-        """Consistent copy of the stats dict (for scraping threads)."""
+        """Consistent copy of the stats dict (for scraping threads), plus
+        the process-wide compile telemetry since this engine's creation
+        (``recompiles_total`` / ``compile_seconds_total``)."""
         with self._lock:
-            return dict(self.stats)
+            snap = dict(self.stats)
+        count, seconds = obs_cost.COMPILES.totals()
+        snap["recompiles_total"] = count - self._compiles0[0]
+        snap["compile_seconds_total"] = round(seconds - self._compiles0[1], 6)
+        return snap
 
     @property
     def cache_hit_rate(self) -> float:

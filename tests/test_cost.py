@@ -1,0 +1,342 @@
+"""Cost observatory tests: roofline accounting, compile/memory telemetry,
+and the bench-trajectory regression gate.
+
+Covers repro.obs.cost (HLO-derived per-stage FLOPs/bytes vs the analytic
+models in repro.kernels.ops, the AOT compile cache / compile counters),
+the engine/service telemetry surfacing, and benchmarks/trajectory.py +
+benchmarks/check_regression.py (synthetic histories: injected slowdown
+fails, noise passes, bless resets the baseline).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SaPOptions, batch_factor, batch_plan
+from repro.core.banded import band_matvec, random_banded
+from repro.kernels import ops
+from repro.obs import cost
+from repro.obs.trace import Tracer, use_tracer
+from repro.serve.service import AsyncSolverService
+from repro.serve.solver_engine import SolverEngine
+
+from benchmarks import check_regression, trajectory
+
+
+# ---------------------------------------------------------------------------
+# hardware model
+# ---------------------------------------------------------------------------
+
+
+def test_hardware_spec_defaults():
+    hw = cost.hardware_spec()
+    assert hw.peak_flops > 0 and hw.hbm_bw > 0
+    assert cost.hardware_spec("gpu").name == "gpu-a100"
+    assert cost.hardware_spec("tpu").peak_flops > cost.hardware_spec(
+        "cpu").peak_flops
+
+
+def test_hardware_spec_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_PEAK_FLOPS", "1e15")
+    monkeypatch.setenv("REPRO_HBM_BW", "2e12")
+    hw = cost.hardware_spec("cpu")
+    assert hw.peak_flops == 1e15
+    assert hw.hbm_bw == 2e12
+    assert hw.name.endswith("+env")
+
+
+# ---------------------------------------------------------------------------
+# StageCost arithmetic + cost_of on a known kernel
+# ---------------------------------------------------------------------------
+
+
+def test_cost_of_matmul_exact_flops():
+    n = 64
+    a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    c = cost.cost_of(lambda x, y: x @ y, a, a, stage="matmul")
+    # one dot: exactly 2 n^3 flops (the HLO walk counts dots analytically)
+    assert c.flops == pytest.approx(2.0 * n**3, rel=0.05)
+    # two inputs + one output, f32
+    assert c.hbm_bytes == pytest.approx(3 * n * n * 4, rel=0.25)
+    assert c.intensity == pytest.approx(c.flops / c.hbm_bytes)
+
+
+def test_stage_cost_roofline_identity():
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    c = cost.cost_of(lambda x: x + 1.0, a, stage="add")
+    assert c.roofline_s == max(c.compute_s, c.memory_s)
+    assert c.bottleneck in ("compute", "memory")
+    # elementwise add is memory bound on any sane hardware model
+    assert c.bottleneck == "memory"
+
+
+def test_stage_cost_scale_and_per_iteration():
+    a = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    c = cost.cost_of(
+        lambda x: x * 2.0, a, stage="mul", loop_iters=10
+    )
+    one = c.per_iteration()
+    assert one.flops == pytest.approx(c.flops / 10)
+    assert one.loop_iters is None
+    tripled = one.scale(3)
+    assert tripled.flops == pytest.approx(3 * one.flops)
+    assert tripled.roofline_s == pytest.approx(3 * one.roofline_s)
+    d = tripled.to_dict(measured_s=2 * tripled.roofline_s)
+    assert d["roofline_frac"] == pytest.approx(0.5, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# solver stage costs vs the analytic models
+# ---------------------------------------------------------------------------
+
+OPTS = SaPOptions(p=4, variant="C", tol=1e-6, maxiter=50)
+BUCKET = (256, 4, 4)
+
+
+def test_solver_stage_costs_stages_present():
+    costs = cost.solver_stage_costs(BUCKET, s=1, opts=OPTS)
+    for stage in ("factor", "krylov", "btf", "bts"):
+        assert stage in costs, stage
+        assert costs[stage].flops > 0
+        assert costs[stage].hbm_bytes > 0
+    assert costs["krylov"].loop_iters == OPTS.maxiter
+
+
+def test_solver_stage_costs_cached():
+    first = cost.solver_stage_costs(BUCKET, s=1, opts=OPTS)
+    again = cost.solver_stage_costs(BUCKET, s=1, opts=OPTS)
+    assert first is again  # same dict object: served from the cache
+
+
+def test_btf_bts_flops_within_analytic_band():
+    """The HLO walk counts every lowered op, so it sits above the
+    leading-order algebraic count -- but only by a bounded factor."""
+    costs = cost.solver_stage_costs(BUCKET, s=1, opts=OPTS)
+    nb, kb, p = BUCKET
+    m = nb // (p * kb)
+    for stage, analytic in (
+        ("btf", ops.btf_flops(p, m, kb)),
+        ("bts", ops.bts_flops(p, m, kb)),
+    ):
+        ratio = costs[stage].flops / analytic
+        assert 1.0 <= ratio <= 20.0, (stage, ratio)
+
+
+def test_bcr_flops_within_analytic_band():
+    opts_e = SaPOptions(p=4, variant="E", reduced_solver="bcr",
+                        tol=1e-6, maxiter=50)
+    costs = cost.solver_stage_costs(BUCKET, s=1, opts=opts_e, variant="E")
+    assert "bcr" in costs
+    ratio = costs["bcr"].flops / ops.bcr_flops(opts_e.p - 1, 2 * BUCKET[1])
+    assert 1.0 <= ratio <= 20.0, ratio
+
+
+# ---------------------------------------------------------------------------
+# compile telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_compile_counter_first_vs_cached_bucket():
+    opts = SaPOptions(p=2, variant="C", tol=1e-6, maxiter=20)
+    bands = [jnp.asarray(random_banded(96, 2, d=1.2, seed=s), jnp.float32)
+             for s in range(2)]
+
+    def labeled_factor_compiles():
+        ent = cost.COMPILES.snapshot()["labels"].get("factor.batch")
+        return ent["count"] if ent else 0
+
+    before = labeled_factor_compiles()
+    batch_factor(batch_plan(bands, opts))
+    first = labeled_factor_compiles() - before
+    batch_factor(batch_plan(bands, opts))
+    second = labeled_factor_compiles() - before - first
+    # a fresh bucket shape pays exactly one factor-stages compile; the
+    # second batch_factor of the same bucket reuses the AOT executable
+    assert first == 1
+    assert second == 0
+
+
+def test_device_memory_bytes_positive():
+    x = jnp.ones((128, 128))  # keep at least one live array around
+    assert cost.device_memory_bytes() > 0
+    del x
+
+
+# ---------------------------------------------------------------------------
+# engine + service surfacing
+# ---------------------------------------------------------------------------
+
+
+def _one_system(n=96, k=2, seed=0):
+    band = np.float32(random_banded(n, k, d=1.2, seed=seed))
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=n).astype(np.float32)
+    b = np.asarray(band_matvec(jnp.asarray(band), jnp.asarray(x)))
+    return band, b
+
+
+def test_engine_cost_accounting_and_telemetry():
+    opts = SaPOptions(p=2, variant="C", tol=1e-6, maxiter=30)
+    eng = SolverEngine(opts, max_batch=8, cache_size=8,
+                       cost_accounting=True)
+    tracer = Tracer()
+    with use_tracer(tracer):
+        band, b = _one_system(seed=1)
+        eng.submit_system(band, b)
+        done = eng.run_until_drained()
+    assert done and all(r.result.converged for r in done)
+
+    snap = eng.stats_snapshot()
+    assert snap["recompiles_total"] >= 1
+    assert snap["compile_seconds_total"] > 0
+    assert snap["peak_device_bytes"] > 0
+
+    totals = eng.cost_snapshot()
+    assert totals["factor"]["flops"] > 0
+    assert totals["krylov"]["roofline_s"] > 0
+
+    # the solve span carries the per-stage cost records
+    spans = tracer.find("engine.solve_prepared")
+    assert spans
+    c = spans[0].attrs.get("cost")
+    assert c and c["factor"]["flops"] > 0 and "roofline_s" in c["krylov"]
+
+
+def test_service_prometheus_has_cost_series():
+    opts = SaPOptions(p=2, variant="C", tol=1e-6, maxiter=30)
+    svc = AsyncSolverService(opts, start=False, cost_accounting=True)
+    band, b = _one_system(seed=2)
+    fut = svc.submit(band, b)
+    while svc.pending:
+        svc.drain_once()
+    assert fut.result(5).converged
+
+    prom = svc.render()
+    assert "recompiles_total" in prom
+    assert "compile_seconds_total" in prom
+    assert "peak_device_bytes" in prom
+    snap = svc.snapshot()
+    assert snap["gauges"]["peak_device_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# trajectory + regression gate
+# ---------------------------------------------------------------------------
+
+
+def _doc(us, bench="batched", row="fleet/batched_S=8", t=1000,
+         backend="cpu", smoke=True):
+    return {
+        "bench": bench,
+        "unix_time": t,
+        "platform": {"backend": backend, "machine": "x86_64",
+                     "device_count": 1},
+        "meta": {"smoke": smoke},
+        "rows": [{"name": row, "us_per_call": us, "derived": {}}],
+    }
+
+
+def test_trajectory_roundtrip(tmp_path):
+    hist = tmp_path / "h.jsonl"
+    assert trajectory.load_history(hist) == []
+    trajectory.append_history(_doc(100.0, t=1), hist)
+    trajectory.append_history(_doc(110.0, t=2), hist)
+    recs = trajectory.load_history(hist)
+    assert len(recs) == 2
+    base = trajectory.baseline_records(
+        recs, "batched", "fleet/batched_S=8", "cpu/x86_64/d1", True)
+    assert [r["us_per_call"] for r in base] == [100.0, 110.0]
+    # platform / smoke filters
+    assert not trajectory.baseline_records(
+        recs, "batched", "fleet/batched_S=8", "gpu/x86_64/d1", True)
+    assert not trajectory.baseline_records(
+        recs, "batched", "fleet/batched_S=8", "cpu/x86_64/d1", False)
+
+
+def test_trajectory_doc_path_input(tmp_path):
+    doc_path = tmp_path / "BENCH_x.json"
+    doc_path.write_text(json.dumps(_doc(50.0)))
+    hist = tmp_path / "h.jsonl"
+    assert trajectory.append_history(doc_path, hist) == 1
+    assert trajectory.load_history(hist)[0]["us_per_call"] == 50.0
+
+
+def test_regression_gate_fails_on_2x_slowdown(tmp_path):
+    hist = tmp_path / "h.jsonl"
+    for t, us in enumerate((100.0, 102.0, 98.0)):
+        trajectory.append_history(_doc(us, t=t), hist)
+    with pytest.raises(check_regression.RegressionError) as err:
+        check_regression.check([_doc(200.0, t=9)], hist, tolerance=1.5)
+    assert "fleet/batched_S=8" in str(err.value)
+    # the CLI path exits 1 on the same regression (what fails CI)
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(_doc(200.0, t=9)))
+    assert check_regression.main(
+        [str(cur), "--history", str(hist), "--tolerance", "1.5"]) == 1
+    assert check_regression.main(
+        [str(cur), "--history", str(hist), "--tolerance", "3.0"]) == 0
+
+
+def test_regression_gate_passes_within_noise(tmp_path):
+    hist = tmp_path / "h.jsonl"
+    for t, us in enumerate((100.0, 102.0, 98.0)):
+        trajectory.append_history(_doc(us, t=t), hist)
+    verdicts = check_regression.check([_doc(110.0, t=9)], hist,
+                                      tolerance=1.5)
+    assert verdicts[0]["status"] == "ok"
+    assert verdicts[0]["ratio"] == pytest.approx(1.1)
+
+
+def test_regression_gate_skips_unmatched_platform(tmp_path):
+    hist = tmp_path / "h.jsonl"
+    trajectory.append_history(_doc(100.0, backend="tpu"), hist)
+    verdicts = check_regression.check([_doc(500.0)], hist, tolerance=1.5)
+    assert verdicts[0]["status"] == "no-baseline"
+
+
+def test_bless_resets_baseline(tmp_path):
+    hist = tmp_path / "h.jsonl"
+    trajectory.append_history(_doc(100.0, t=1), hist)
+    # 3x slower: gated...
+    with pytest.raises(check_regression.RegressionError):
+        check_regression.check([_doc(300.0, t=2)], hist, tolerance=1.5)
+    # ...until blessed (accepted intentional regression)
+    trajectory.append_bless(hist, note="slower but exact", unix_time=3)
+    verdicts = check_regression.check([_doc(300.0, t=4)], hist,
+                                      tolerance=1.5)
+    assert verdicts[0]["status"] == "no-baseline"
+    # new history accrues after the marker and gates again
+    trajectory.append_history(_doc(300.0, t=5), hist)
+    with pytest.raises(check_regression.RegressionError):
+        check_regression.check([_doc(900.0, t=6)], hist, tolerance=1.5)
+
+
+def test_scoped_bless_only_covers_named_row(tmp_path):
+    hist = tmp_path / "h.jsonl"
+    trajectory.append_history(_doc(100.0, row="a", t=1), hist)
+    trajectory.append_history(_doc(100.0, row="b", t=1), hist)
+    trajectory.append_bless(hist, bench="batched", row="a", unix_time=2)
+    recs = trajectory.load_history(hist)
+    assert not trajectory.baseline_records(
+        recs, "batched", "a", "cpu/x86_64/d1", True)
+    assert trajectory.baseline_records(
+        recs, "batched", "b", "cpu/x86_64/d1", True)
+
+
+def test_committed_history_gates_committed_benches():
+    """The in-repo BENCH_history.jsonl must cover the committed smoke
+    artifacts: every committed row either passes the gate or has a
+    matched baseline to compare against at CI tolerance."""
+    from benchmarks.common import repo_root_default
+
+    root = repo_root_default()
+    hist = root / "BENCH_history.jsonl"
+    assert hist.exists()
+    docs = [json.loads((root / f).read_text())
+            for f in ("BENCH_batched.json", "BENCH_serve.json")]
+    verdicts = check_regression.check(docs, hist, tolerance=4.0)
+    assert verdicts and all(v["status"] in ("ok", "no-baseline")
+                            for v in verdicts)
