@@ -139,6 +139,59 @@ def bench_fleet(report: Report, smoke: bool = False):
         )
 
 
+def bench_fused(report: Report, smoke: bool = False):
+    """Fused factor+spike megakernel vs the kernel-sequence baseline.
+
+    Same bucket, same fleet, ``fused_factor="off"`` (btf -> UL-btf ->
+    spike solves) vs ``"on"`` (one fused pass,
+    :mod:`repro.kernels.fused_spike`).  Each row carries the cost
+    observatory's factor-stage record for its path: the fused pass never
+    materializes the UL factors or the whole spikes, so its factor-stage
+    HBM bytes must come in *below* the sequence baseline -- that byte gap
+    is the committed, machine-checkable form of the megakernel claim
+    (visible even on the jnp path, where XLA's cost analysis counts the
+    same skipped materializations).
+    """
+    n, k, p, s = (512, 8, 4, 8) if smoke else (2048, 8, 8, 32)
+    bands, bmat, xs = _fleet(s, n, k)
+    stage = {}
+    for mode in ("off", "on"):
+        opts = SaPOptions(p=p, variant="C", tol=1e-6, maxiter=200,
+                          fused_factor=mode)
+        jax.clear_caches()
+        bpl = batch_plan(bands, opts)
+
+        def factor_only():
+            return batch_factor(bpl).fac.pc
+
+        us = timeit(factor_only, warmup=1, iters=3)
+        res = batch_factor(bpl).solve_batch(bmat)
+        err = float(np.abs(np.asarray(res.x)[:, :n] - xs).max())
+        try:
+            cost = solver_stage_costs((bpl.n, bpl.k, p), s=s, opts=opts)
+        except Exception:
+            cost = None
+        rec = cost["factor"] if cost else None
+        stage[mode] = rec
+        label = "fused" if mode == "on" else "sequence"
+        extra = ""
+        if mode == "on" and stage["off"] is not None and rec is not None:
+            saved = stage["off"].hbm_bytes - rec.hbm_bytes
+            extra = (f";hbm_bytes_saved={saved:.3e}"
+                     f";bytes_ratio={rec.hbm_bytes / stage['off'].hbm_bytes:.4f}")
+        report.add(
+            f"fused/factor_{label}_S={s}",
+            us,
+            f"maxerr={err:.1e};"
+            f"conv={bool(np.asarray(res.converged).all())};"
+            f"true_res={float(np.asarray(res.true_resnorm).max()):.3e};"
+            f"tol={opts.tol:g}"
+            + (f";factor_hbm_bytes={rec.hbm_bytes:.4e}" if rec else "")
+            + extra,
+            cost={"factor": rec.to_dict()} if rec else None,
+        )
+
+
 def bench_engine(report: Report, smoke: bool = False):
     """Serving path: heterogeneous fleet, repeated matrices, LRU cache."""
     n0, k0, steps, distinct = (256, 4, 3, 2) if smoke else (1024, 8, 8, 4)
@@ -201,6 +254,7 @@ def _engine_cost(eng: SolverEngine) -> dict | None:
 
 def run(report: Report, smoke: bool = False):
     bench_fleet(report, smoke)
+    bench_fused(report, smoke)
     bench_engine(report, smoke)
 
 

@@ -46,6 +46,7 @@ STAGE_SPANS = {
     "factor": "lu_spk",
     "factor.batch": "lu_spk",
     "factor.lu": "lu_spk",
+    "factor.fused": "lu_spk",
     "factor.spike": "lu_spk",
     "factor.reduced": "lu_spk",
     "factor.split": "lu_spk",

@@ -68,6 +68,7 @@ from .sap import (
     _convergence_summary,
     _precond_dtype,
     _solve_impl,
+    resolve_solver,
     resolve_variant,
 )
 from .spike import build_preconditioner
@@ -305,6 +306,7 @@ class BatchedSaPPlan:
 
     @property
     def s(self) -> int:
+        """Number of systems in the batch."""
         return self.bands.shape[0]
 
 
@@ -389,14 +391,17 @@ class BatchedSaPFactorization:
 
     @property
     def n(self) -> int:
+        """Padded per-system size shared by the whole batch."""
         return self.fac.n
 
     @property
     def k(self) -> int:
+        """Padded half-bandwidth shared by the whole batch."""
         return self.fac.k
 
     @property
     def variant(self) -> str:
+        """Resolved SaP variant shared by the whole batch."""
         return self.fac.variant
 
     def solve_batch(
@@ -474,7 +479,12 @@ def _solve_batch_many(
 def _factor_key(opts: SaPOptions) -> tuple:
     """The options that actually reach the factor stages -- tolerances and
     Krylov knobs deliberately excluded so they never force a re-trace."""
-    return (opts.boost_eps, opts.precond_dtype, opts.reduced_solver)
+    return (
+        opts.boost_eps,
+        opts.precond_dtype,
+        opts.reduced_solver,
+        opts.fused_factor,
+    )
 
 
 @lru_cache(maxsize=64)
@@ -485,7 +495,7 @@ def _factor_stages_fn(k: int, p: int, variant: str, opts_key: tuple):
     engine's repeated ``batch_factor`` calls hit the same traced
     executable instead of re-tracing every step.
     """
-    boost_eps, precond_dtype, reduced_solver = opts_key
+    boost_eps, precond_dtype, reduced_solver, fused = opts_key
     pdt = _precond_dtype(SaPOptions(precond_dtype=precond_dtype))
 
     def stages(band):
@@ -497,6 +507,7 @@ def _factor_stages_fn(k: int, p: int, variant: str, opts_key: tuple):
             boost_eps=boost_eps,
             precond_dtype=pdt,
             reduced_solver=reduced_solver,
+            fused=fused,
         )
         return pc, d_factor
 
@@ -607,6 +618,7 @@ def batch_factor(bpl: BatchedSaPPlan) -> BatchedSaPFactorization:
         maxiter=opts.maxiter,
         use_cg=opts.use_cg,
         iter_dtype=opts.iter_dtype,
+        solver=resolve_solver(opts.solver, opts.use_cg),
         d_factor=d_factors,
     )
     return BatchedSaPFactorization(fac=fac, s=bpl.s, orig_ns=bpl.orig_ns)

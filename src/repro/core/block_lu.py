@@ -231,3 +231,171 @@ def btf_ul_ref(
     """UL factors == LU factors of the reversed partition."""
     d_r, e_r, f_r = flip_block_tridiag(d, e, f)
     return btf_ref(d_r, e_r, f_r, boost_eps)
+
+
+# ---------------------------------------------------------------------------
+# Fused factor + spike extraction (single ascending pass, Sec. 2.1 + 3.1)
+# ---------------------------------------------------------------------------
+#
+# The SaP preconditioner needs, besides the LU factors of each partition,
+# the four corner blocks of the spikes:
+#
+#   v_bot[i] = Sinv_i[M-1] @ B_i                     (right spike, bottom)
+#   v_top[i] = top block of A_i^{-1} [0;..;B_i]      (right spike, top)
+#   w_top[i] = top block of A_{i+1}^{-1} [C_{i+1};0;..]   (left spike, top)
+#   w_bot[i] = bottom block of the same left spike
+#
+# The kernel-sequence formulation materializes a full UL factorization
+# (w_top) and solves whole K-column spikes through bts (v_top / w_bot),
+# each round-tripping (P, M, K, K) intermediates through HBM.  All four
+# corners are available from ONE ascending sweep j = 0..M-1 that carries
+# four K x K blocks:
+#
+#   * the LU recurrence (sinv_prev), emitting sinv_j / l_j as usual;
+#   * the UL recurrence, i.e. the LU recurrence on the reversed chain
+#     (flip_block_tridiag) -- only its carry is kept, no UL factors are
+#     ever written;
+#   * the left-spike RHS swept forward through LU:  y_0 = C_i,
+#     y_j = -l_j y_{j-1}  (the rhs is zero past block 0), so
+#     w_bot = sinv_{M-1} y_{M-1} needs no backward substitution;
+#   * the right-spike RHS swept forward through UL:  yr_0 = flip(B_i),
+#     yr_j = -l^{UL}_j yr_{j-1}, so v_top = flip(sinv^{UL}_{M-1} yr_{M-1}).
+#
+# ``fused_factor_spike_padded_ref`` is the op-for-op oracle of the Pallas
+# megakernel in ``repro.kernels.fused_spike`` (bit-level parity in
+# interpret mode); ``fused_factor_spike_ref`` wraps it with the
+# (P-1)-interface coupling layout used by ``repro.core.spike``.
+
+
+class FusedSpikeFactors(NamedTuple):
+    """LU factors plus the four spike corner blocks, from one fused pass.
+
+    lu:     factors of diag(A_1..A_P) (identical to :func:`btf_ref`)
+    v_bot:  (P-1, K, K)  bottom blocks of the right spikes V_i,  i=0..P-2
+    v_top:  (P-1, K, K)  top blocks of the same right spikes
+    w_top:  (P-1, K, K)  top blocks of the left spikes W_{i+1}
+    w_bot:  (P-1, K, K)  bottom blocks of the same left spikes
+    """
+
+    lu: BTFactors
+    v_bot: jax.Array
+    v_top: jax.Array
+    w_top: jax.Array
+    w_bot: jax.Array
+
+
+def _flip2(x: jax.Array) -> jax.Array:
+    return x[..., ::-1, ::-1]
+
+
+def _fliprows(x: jax.Array) -> jax.Array:
+    return x[..., ::-1, :]
+
+
+@partial(jax.jit, static_argnames=("boost_eps",))
+def fused_factor_spike_padded_ref(
+    d: jax.Array,
+    e: jax.Array,
+    f: jax.Array,
+    bq: jax.Array,
+    cq: jax.Array,
+    boost_eps: float = DEFAULT_BOOST,
+):
+    """Fused factor+spike pass on per-partition padded couplings.
+
+    d/e/f: (P, M, K, K); bq/cq: (P, K, K) -- the coupling block *of each
+    partition* (``bq[p] = B_p`` or zero for the last partition,
+    ``cq[p] = C_p`` or zero for the first), so every partition is an
+    independent chain and a batch axis can fold straight into P.
+
+    Returns ``(sinv, l, vb, vt, wt, wb)`` with sinv/l of shape
+    (P, M, K, K) and the corners (P, K, K); corner blocks of partitions
+    whose coupling is zero come out exactly zero.
+    """
+    p, m, k, _ = d.shape
+
+    def one_partition(dp, ep, fp, bqp, cqp):
+        sinv0 = gj_inverse(dp[0], boost_eps)
+        sinv_ul0 = gj_inverse(_flip2(dp[m - 1]), boost_eps)
+
+        def step(carry, blocks):
+            sinv_prev, sinv_ul_prev, yw, yv = carry
+            dj, ej, fjm1, drj, erj, frm1 = blocks
+            lj = ej @ sinv_prev
+            sj = dj - lj @ fjm1
+            sinvj = gj_inverse(sj, boost_eps)
+            yw = -(lj @ yw)
+            l_ul = erj @ sinv_ul_prev
+            s_ul = drj - l_ul @ frm1
+            sinv_ul = gj_inverse(s_ul, boost_eps)
+            yv = -(l_ul @ yv)
+            return (sinvj, sinv_ul, yw, yv), (sinvj, lj)
+
+        dpr = dp[::-1]
+        xs = (
+            dp[1:], ep[1:], fp[:-1],
+            _flip2(dpr[1:]),          # d_r[j]   = flip2(d[M-1-j])
+            _flip2(fp[::-1][1:]),     # e_r[j]   = flip2(f[M-1-j])
+            _flip2(ep[::-1][:-1]),    # f_r[j-1] = flip2(e[M-j])
+        )
+        init = (sinv0, sinv_ul0, cqp, _fliprows(bqp))
+        (sinv_l, sinv_ul_l, yw_l, yv_l), (sinv_rest, l_rest) = jax.lax.scan(
+            step, init, xs
+        )
+        sinv = jnp.concatenate([sinv0[None], sinv_rest], axis=0)
+        l = jnp.concatenate([jnp.zeros_like(sinv0)[None], l_rest], axis=0)
+        vb = sinv_l @ bqp
+        wb = sinv_l @ yw_l
+        wt = _fliprows(sinv_ul_l @ _fliprows(cqp))
+        vt = _fliprows(sinv_ul_l @ yv_l)
+        return sinv, l, vb, vt, wt, wb
+
+    return jax.vmap(one_partition)(d, e, f, bq, cq)
+
+
+def pad_couplings(
+    b_cpl: jax.Array, c_cpl: jax.Array, p: int
+) -> Tuple[jax.Array, jax.Array]:
+    """(P-1, K, K) interface couplings -> per-partition (P, K, K) layout.
+
+    ``bq[p] = B_p`` (zero for the last partition, which has no right
+    neighbor); ``cq[p] = C_p`` (zero for the first).  Zero couplings make
+    the corresponding corner blocks exactly zero, so padded slots carry no
+    information and slicing recovers the interface layout.
+    """
+    pad = jnp.zeros(b_cpl.shape[:-3] + (1,) + b_cpl.shape[-2:], b_cpl.dtype)
+    bq = jnp.concatenate([b_cpl, pad], axis=-3)
+    cq = jnp.concatenate([pad, c_cpl], axis=-3)
+    return bq, cq
+
+
+def fused_factor_spike_ref(
+    d: jax.Array,
+    e: jax.Array,
+    f: jax.Array,
+    b_cpl: jax.Array,
+    c_cpl: jax.Array,
+    boost_eps: float = DEFAULT_BOOST,
+) -> FusedSpikeFactors:
+    """Fused factor + spike-corner extraction (pure-jnp reference).
+
+    d/e/f: (P, M, K, K) partition blocks; b_cpl/c_cpl: (P-1, K, K)
+    interface couplings as in :class:`~repro.core.banded.BlockTridiag`.
+    ``lu``, ``v_bot`` and ``w_top`` are bit-identical to the
+    btf/UL-sequence formulation (:func:`btf_ref` /
+    :func:`btf_ul_ref`); ``v_top`` / ``w_bot`` are algebraically equal to
+    the whole-spike bts solves but computed through the UL/LU forward
+    carries instead (different rounding).
+    """
+    p = d.shape[0]
+    bq, cq = pad_couplings(b_cpl.astype(d.dtype), c_cpl.astype(d.dtype), p)
+    sinv, l, vb, vt, wt, wb = fused_factor_spike_padded_ref(
+        d, e, f, bq, cq, boost_eps
+    )
+    return FusedSpikeFactors(
+        lu=BTFactors(sinv=sinv, l=l, f=f),
+        v_bot=vb[:-1],
+        v_top=vt[:-1],
+        w_top=wt[1:],
+        w_bot=wb[1:],
+    )

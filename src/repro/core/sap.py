@@ -52,7 +52,7 @@ from ..obs.trace import span
 from . import reorder as reorder_mod
 from .banded import band_to_block_tridiag, diag_dominance_factor
 from .block_lu import DEFAULT_BOOST
-from .krylov import KrylovResult, _bicgstab2_impl, _cg_impl
+from .krylov import KrylovResult, _bicgstab2_impl, _cg_impl, _refine_impl
 from .operators import (
     BandedOperator,
     CsrOperator,
@@ -64,6 +64,8 @@ from .spike import SaPPreconditioner, build_preconditioner
 
 @dataclasses.dataclass
 class SaPOptions:
+    """Solver configuration: partitioning, variant, tolerances, dtypes."""
+
     p: int = 8  # number of partitions
     # "C" coupled (truncated SPIKE) | "D" decoupled | "E" exact reduced
     # system | "auto" (C when the preconditioner band is diagonally
@@ -85,6 +87,15 @@ class SaPOptions:
     precond_dtype: str = "float32"
     iter_dtype: Optional[str] = None  # Krylov dtype; None = follow the RHS
     use_cg: bool = False  # CG for SPD systems
+    # Outer solver: "bicgstab2" | "cg" | "refine" (preconditioned iterative
+    # refinement -- the mixed-precision play: factor in precond_dtype=f32,
+    # refine in iter_dtype=f64 to full f64 accuracy) | "auto" (= "cg" when
+    # use_cg else "bicgstab2"; use_cg remains as the legacy spelling).
+    solver: str = "auto"
+    # Fused factor+spike megakernel: "on" | "off" | "auto" (fused on the
+    # compiled Pallas path, kernel sequence elsewhere).  See
+    # repro.kernels.fused_spike; resolved at factor() time.
+    fused_factor: str = "auto"
     # reduced-system solver for variant "E": "chain" = sequential btf/bts
     # sweep over the (P-1)-interface chain, "bcr" = log-depth block cyclic
     # reduction, "auto" = bcr once the chain is long enough to amortize it.
@@ -258,7 +269,7 @@ def plan(a, opts: Optional[SaPOptions] = None) -> SaPPlan:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=("op", "pc", "b_perm", "x_perm", "d_factor"),
-    meta_fields=("n", "k", "tol", "maxiter", "use_cg", "iter_dtype"),
+    meta_fields=("n", "k", "tol", "maxiter", "use_cg", "iter_dtype", "solver"),
 )
 @dataclasses.dataclass(eq=False)
 class SaPFactorization:
@@ -285,18 +296,23 @@ class SaPFactorization:
     maxiter: int
     use_cg: bool
     iter_dtype: Optional[str]
+    # resolved outer solver ("bicgstab2" | "cg" | "refine"); never "auto"
+    solver: str = "bicgstab2"
     d_factor: Optional[jax.Array] = None  # scalar, Eq. 2.11 estimate
 
     @property
     def variant(self) -> str:
+        """Variant actually factored ("auto" resolved): "C", "D", or "E"."""
         return self.pc.variant
 
     @property
     def p(self) -> int:
+        """Number of partitions in the factorization."""
         return self.pc.p
 
     @property
     def n_pad(self) -> int:
+        """Internal (padded) problem size P*M*K; >= the user's N."""
         return self.pc.p * self.pc.m * self.pc.k
 
     def solve(self, b: jax.Array, record_history: bool = False) -> SaPSolveResult:
@@ -346,6 +362,19 @@ class SaPFactorization:
         return res
 
 
+def resolve_solver(solver: str, use_cg: bool) -> str:
+    """Resolve ``SaPOptions.solver`` to a concrete outer solver name.
+
+    ``"auto"`` honors the legacy ``use_cg`` flag; explicit names win over
+    it.  The result is what ``SaPFactorization.solver`` carries.
+    """
+    if solver == "auto":
+        return "cg" if use_cg else "bicgstab2"
+    if solver not in ("bicgstab2", "cg", "refine"):
+        raise ValueError(f"unknown solver {solver!r}")
+    return solver
+
+
 def resolve_variant(variant: str, d_factor: float) -> str:
     """The ``"auto"`` policy: truncated SPIKE needs spike decay, which the
     paper ties to diagonal dominance (Sec. 2.1.1) -- pick the cheap
@@ -377,6 +406,7 @@ def factor(pl: SaPPlan) -> SaPFactorization:
             boost_eps=opts.boost_eps,
             precond_dtype=_precond_dtype(opts),
             reduced_solver=opts.reduced_solver,
+            fused=opts.fused_factor,
         )
         sp.sync(pc)
     to_idx = lambda p: None if p is None else jnp.asarray(p, jnp.int32)
@@ -391,6 +421,7 @@ def factor(pl: SaPPlan) -> SaPFactorization:
         maxiter=opts.maxiter,
         use_cg=opts.use_cg,
         iter_dtype=opts.iter_dtype,
+        solver=resolve_solver(opts.solver, opts.use_cg),
         d_factor=d_factor,
     )
 
@@ -423,7 +454,12 @@ def _solve_impl(
             )
             return fac.pc.apply(rp)[:n]
 
-    solver = _cg_impl if fac.use_cg else _bicgstab2_impl
+    if fac.solver == "refine":
+        solver = _refine_impl
+    elif fac.solver == "cg" or fac.use_cg:
+        solver = _cg_impl
+    else:
+        solver = _bicgstab2_impl
     with jax.named_scope("sap.krylov"):
         res: KrylovResult = solver(
             fac.op.matvec,

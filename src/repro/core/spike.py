@@ -58,11 +58,13 @@ from .banded import BlockTridiag
 from .block_lu import (
     DEFAULT_BOOST,
     BTFactors,
+    FusedSpikeFactors,
     btf_chain,
     btf_ref,
     btf_ul_ref,
     bts_chain,
     bts_ref,
+    fused_factor_spike_ref,
     gj_inverse,
 )
 from ..obs.trace import span
@@ -84,7 +86,7 @@ def _flip_rows(x: jax.Array) -> jax.Array:
         "lu", "b_cpl", "c_cpl", "v_bot", "w_top", "rbar_inv", "red_lu",
         "red_bcr",
     ),
-    meta_fields=("variant", "p", "m", "k", "impl", "reduced_solver"),
+    meta_fields=("variant", "p", "m", "k", "impl", "reduced_solver", "fused"),
 )
 @dataclasses.dataclass
 class SaPPreconditioner:
@@ -110,6 +112,9 @@ class SaPPreconditioner:
     # resolved reduced-chain solver for variant E: "chain" (sequential
     # btf/bts sweep) or "bcr" (log-depth cyclic reduction); "none" otherwise
     reduced_solver: str = "none"
+    # True when the factor+spike stage ran as the fused single-pass
+    # megakernel instead of the btf -> UL -> bts kernel sequence
+    fused: bool = False
 
     def apply(self, r: jax.Array) -> jax.Array:
         """Apply M^{-1} to a (padded) flat residual of length P*M*K."""
@@ -173,6 +178,28 @@ def _bcr_solve(factors, b, impl):
     from repro.kernels import ops as kops
 
     return kops.bcr_solve(factors, b, impl=impl)
+
+
+def _fused_factor_spike(d, e, f, b_cpl, c_cpl, boost_eps, impl):
+    """Fused factor+spike megakernel through the same dispatch."""
+    if impl == "jnp":
+        return fused_factor_spike_ref(d, e, f, b_cpl, c_cpl, boost_eps)
+    from repro.kernels import ops as kops
+
+    return kops.fused_factor_spike(d, e, f, b_cpl, c_cpl, boost_eps, impl=impl)
+
+
+def resolve_fused(fused, impl: str) -> bool:
+    """Resolve the ``fused_factor`` knob: ``"auto"`` means fused on the
+    compiled kernel path (where the VMEM carries actually avoid HBM
+    round trips) and the kernel-sequence formulation elsewhere."""
+    if fused in (True, "on"):
+        return True
+    if fused in (None, False, "off"):
+        return False
+    if fused == "auto":
+        return impl == "pallas"
+    raise ValueError(f"unknown fused_factor setting {fused!r}")
 
 
 def _apply_coupled(pc: SaPPreconditioner, rb: jax.Array) -> jax.Array:
@@ -253,6 +280,7 @@ def build_preconditioner(
     impl: str = "jnp",
     spike_mode: str = "ul",
     reduced_solver: str = "auto",
+    fused: str | bool = "off",
 ) -> SaPPreconditioner:
     """Factor the SaP preconditioner from block-tridiagonal partitions.
 
@@ -274,6 +302,17 @@ def build_preconditioner(
                    (``repro.core.cyclic_reduction``), same kernel dispatch.
       * "auto"  -- "bcr" once the chain is long enough to amortize the
                    log-depth machinery, else "chain".
+
+    fused (``"on"`` / ``"off"`` / ``"auto"``; bools accepted): run the
+    factor AND spike-corner extraction as ONE fused pass
+    (:func:`repro.kernels.ops.fused_factor_spike`) instead of the
+    btf -> UL-btf -> bts kernel sequence.  ``"auto"`` resolves to fused on
+    the compiled kernel path (``impl="pallas"``), where the UL recurrence
+    and spike carries stay in VMEM instead of round-tripping HBM.  The
+    fused pass is UL-based, so it applies to variants C/E with P > 1 under
+    ``spike_mode="ul"``; it produces bit-identical ``lu`` / ``v_bot`` /
+    ``w_top`` and algebraically equal ``v_top`` / ``w_bot`` (forward
+    carries instead of whole-spike back-substitution).
     """
     if variant not in ("C", "D", "E"):
         raise ValueError(f"unknown SaP variant {variant!r}")
@@ -284,38 +323,61 @@ def build_preconditioner(
         if variant == "E" and bt.p > 1
         else "none"
     )
+    use_fused = (
+        resolve_fused(fused, impl)
+        and variant in ("C", "E")
+        and spike_mode == "ul"
+        and bt.p > 1
+    )
     d = bt.d.astype(precond_dtype)
     e = bt.e.astype(precond_dtype)
     f = bt.f.astype(precond_dtype)
     b_cpl = bt.b_cpl.astype(precond_dtype)
     c_cpl = bt.c_cpl.astype(precond_dtype)
 
+    v_bot = w_top = rbar_inv = red_lu = red_bcr = None
+    v_top = w_bot = None
     # Spans degrade to no-ops under jit/vmap tracing (the batched factor
     # stages call this inside vmap), so host timing only covers eager calls.
-    with span("factor.lu", p=bt.p, m=bt.m, k=bt.k, impl=impl) as sp:
-        lu = sp.sync(_btf(d, e, f, boost_eps, impl))
-
-    v_bot = w_top = rbar_inv = red_lu = red_bcr = None
-    if variant in ("C", "E") and bt.p > 1:
-        with span("factor.spike", variant=variant, mode=spike_mode) as sp:
-            if variant == "C" and spike_mode == "ul":
-                # V_i^(b) = Sinv_i[M-1] @ B_i  for i = 0..P-2
-                v_bot = lu.sinv[:-1, -1] @ b_cpl
-                # W_{i+1}^(t) from the UL factorization of partitions 1..P-1
-                ul = btf_ul_ref(d, e, f, boost_eps)
-                w_top = _flip_rows(ul.sinv[1:, -1] @ _flip_rows(c_cpl))
-            else:
-                # whole right spikes: A_i V_i = [0;..;B_i], keep corner blocks
-                rhs_b = jnp.zeros((bt.p, bt.m, bt.k, bt.k), precond_dtype)
-                rhs_b = rhs_b.at[:-1, -1].set(b_cpl)
-                v_full = _bts(lu, rhs_b, impl)
-                v_bot = v_full[:-1, -1]
-                # whole left spikes: A_{i+1} W_{i+1} = [C_{i+1};0;..]
-                rhs_c = jnp.zeros((bt.p, bt.m, bt.k, bt.k), precond_dtype)
-                rhs_c = rhs_c.at[1:, 0].set(c_cpl)
-                w_full = _bts(lu, rhs_c, impl)
-                w_top = w_full[1:, 0]
+    if use_fused:
+        with span(
+            "factor.fused", p=bt.p, m=bt.m, k=bt.k, variant=variant, impl=impl
+        ) as sp:
+            fs: FusedSpikeFactors = _fused_factor_spike(
+                d, e, f, b_cpl, c_cpl, boost_eps, impl
+            )
+            lu = fs.lu
+            v_bot, w_top = fs.v_bot, fs.w_top
+            v_top, w_bot = fs.v_top, fs.w_bot
             sp.sync((v_bot, w_top))
+    else:
+        with span("factor.lu", p=bt.p, m=bt.m, k=bt.k, impl=impl) as sp:
+            lu = sp.sync(_btf(d, e, f, boost_eps, impl))
+
+    if variant in ("C", "E") and bt.p > 1:
+        if not use_fused:
+            with span("factor.spike", variant=variant, mode=spike_mode) as sp:
+                if variant == "C" and spike_mode == "ul":
+                    # V_i^(b) = Sinv_i[M-1] @ B_i  for i = 0..P-2
+                    v_bot = lu.sinv[:-1, -1] @ b_cpl
+                    # W_{i+1}^(t) from the UL factorization of partitions
+                    # 1..P-1
+                    ul = btf_ul_ref(d, e, f, boost_eps)
+                    w_top = _flip_rows(ul.sinv[1:, -1] @ _flip_rows(c_cpl))
+                else:
+                    # whole right spikes: A_i V_i = [0;..;B_i], keep corners
+                    rhs_b = jnp.zeros((bt.p, bt.m, bt.k, bt.k), precond_dtype)
+                    rhs_b = rhs_b.at[:-1, -1].set(b_cpl)
+                    v_full = _bts(lu, rhs_b, impl)
+                    v_bot = v_full[:-1, -1]
+                    v_top = v_full[:-1, 0]
+                    # whole left spikes: A_{i+1} W_{i+1} = [C_{i+1};0;..]
+                    rhs_c = jnp.zeros((bt.p, bt.m, bt.k, bt.k), precond_dtype)
+                    rhs_c = rhs_c.at[1:, 0].set(c_cpl)
+                    w_full = _bts(lu, rhs_c, impl)
+                    w_top = w_full[1:, 0]
+                    w_bot = w_full[1:, -1]
+                sp.sync((v_bot, w_top))
         if variant == "C":
             with span("factor.reduced", solver="truncated") as sp:
                 eye = jnp.eye(bt.k, dtype=precond_dtype)
@@ -329,7 +391,7 @@ def build_preconditioner(
             # reduction (O(log2 P) parallel levels).
             with span("factor.reduced", solver=reduced_solver) as sp:
                 rd, re, rf = _reduced_interface_system(
-                    v_bot, v_full[:-1, 0], w_top, w_full[1:, -1]
+                    v_bot, v_top, w_top, w_bot
                 )
                 if reduced_solver == "bcr":
                     red_bcr = _bcr_factor(rd, re, rf, boost_eps, impl)
@@ -355,4 +417,5 @@ def build_preconditioner(
         k=bt.k,
         impl=impl,
         reduced_solver=reduced_solver,
+        fused=use_fused,
     )

@@ -23,18 +23,26 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.block_lu import DEFAULT_BOOST, BTFactors
+from repro.core.block_lu import (
+    DEFAULT_BOOST,
+    BTFactors,
+    FusedSpikeFactors,
+    fused_factor_spike_padded_ref,
+    pad_couplings,
+)
 from repro.core.cyclic_reduction import BCRFactors
 
 from . import ref
 from .bcr import bcr_factor_pallas, bcr_solve_pallas
 from .btf import btf_pallas
 from .bts import bts_pallas
+from .fused_spike import fused_factor_spike_pallas
 from .ssd_chunk import ssd_pallas
 from .wkv_chunk import wkv6_pallas
 
 
 def default_impl() -> str:
+    """Kernel backend: REPRO_KERNEL_IMPL if set, else "pallas" on TPU, "jnp"."""
     env = os.environ.get("REPRO_KERNEL_IMPL")
     if env:
         return env
@@ -79,6 +87,7 @@ def block_tridiag_factor(
     boost_eps: float = DEFAULT_BOOST,
     impl: str | None = None,
 ) -> BTFactors:
+    """Block-tridiagonal LU factor of (P, M, K, K) chains; 5-D input batches."""
     impl = impl or default_impl()
     if d.ndim == 5:  # batched (S, P, M, K, K): fold batch into the grid
         s = d.shape[0]
@@ -99,6 +108,7 @@ def block_tridiag_factor(
 def block_tridiag_solve(
     factors: BTFactors, b: jax.Array, impl: str | None = None
 ) -> jax.Array:
+    """Solve the factored chains for (P, M, K, R) right-hand sides."""
     impl = impl or default_impl()
     if b.ndim == 5:  # batched (S, P, M, K, R): fold batch into the grid
         s = b.shape[0]
@@ -148,6 +158,71 @@ def block_tridiag_solve_chain(
     if b.ndim == 4:
         return block_tridiag_solve(factors, b, impl=impl)
     return block_tridiag_solve(factors, b[None], impl=impl)[0]
+
+
+# ---------------------------------------------------------------------------
+# Fused factor + spike megakernel (one pass, four VMEM carries)
+# ---------------------------------------------------------------------------
+
+
+def _fused_padded(d, e, f, bq, cq, boost_eps, impl):
+    if impl == "jnp":
+        return fused_factor_spike_padded_ref(d, e, f, bq, cq, boost_eps)
+    return fused_factor_spike_pallas(
+        d, e, f, bq, cq, boost_eps, interpret=_interpret(impl)
+    )
+
+
+def fused_factor_spike(
+    d: jax.Array,
+    e: jax.Array,
+    f: jax.Array,
+    b_cpl: jax.Array,
+    c_cpl: jax.Array,
+    boost_eps: float = DEFAULT_BOOST,
+    impl: str | None = None,
+) -> FusedSpikeFactors:
+    """Fused block-LU factor + spike-corner extraction in one pass.
+
+    Replaces the btf -> UL-btf -> bts kernel *sequence* of the SaP factor
+    stage: one grid over (partition, block-row) computes the LU factors
+    AND all four spike corner blocks (v_bot / v_top / w_top / w_bot),
+    carrying the UL recurrence and both spike right-hand sides in VMEM
+    instead of materializing UL factors and whole K-column spikes in HBM
+    (see :mod:`repro.kernels.fused_spike`).
+
+    d/e/f: (P, M, K, K) partition blocks; b_cpl/c_cpl: (P-1, K, K)
+    interface couplings.  A 5-dim input (S, P, M, K, K) with (S, P-1, K, K)
+    couplings is a fleet of systems: the batch axis folds into the
+    partition grid like :func:`block_tridiag_factor`.
+
+    ``lu`` / ``v_bot`` / ``w_top`` are bit-identical to the sequence
+    formulation; ``v_top`` / ``w_bot`` are algebraically equal (different
+    rounding -- forward carries instead of whole-spike back-substitution).
+    """
+    impl = impl or default_impl()
+    b_cpl = b_cpl.astype(d.dtype)
+    c_cpl = c_cpl.astype(d.dtype)
+    if d.ndim == 5:  # batched (S, P, M, K, K): fold batch into the grid
+        s, p = d.shape[0], d.shape[1]
+        bq, cq = pad_couplings(b_cpl, c_cpl, p)  # (S, P, K, K)
+        out = _fused_padded(
+            _fold_batch(d), _fold_batch(e), _fold_batch(f),
+            _fold_batch(bq), _fold_batch(cq), boost_eps, impl,
+        )
+        sinv, l, vb, vt, wt, wb = (_unfold_batch(x, s) for x in out)
+        return FusedSpikeFactors(
+            lu=BTFactors(sinv=sinv, l=l, f=f),
+            v_bot=vb[:, :-1], v_top=vt[:, :-1],
+            w_top=wt[:, 1:], w_bot=wb[:, 1:],
+        )
+    p = d.shape[0]
+    bq, cq = pad_couplings(b_cpl, c_cpl, p)
+    sinv, l, vb, vt, wt, wb = _fused_padded(d, e, f, bq, cq, boost_eps, impl)
+    return FusedSpikeFactors(
+        lu=BTFactors(sinv=sinv, l=l, f=f),
+        v_bot=vb[:-1], v_top=vt[:-1], w_top=wt[1:], w_bot=wb[1:],
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +295,17 @@ def bts_flops(p: int, m: int, k: int, r: int = 1) -> float:
     return float(p) * m * 6.0 * k * k * r
 
 
+def fused_factor_spike_flops(p: int, m: int, k: int) -> float:
+    """Fused factor+spike megakernel: the LU recurrence twice (forward and
+    reversed chains, ~6 K^3 + K^2 per block each), two K x K RHS carries
+    (2 K^3 per block each), plus four corner products (2 K^3 each) per
+    partition.  Compare ~2x the flops of :func:`btf_flops` alone -- but
+    the kernel *sequence* it replaces pays the UL factor writeback and two
+    whole-spike bts solves in HBM traffic, which is what the fused pass
+    eliminates (see ``solver_stage_costs``)."""
+    return 2.0 * btf_flops(p, m, k) + float(p) * m * 4.0 * k**3 + float(p) * 8.0 * k**3
+
+
 def bcr_flops(m: int, k: int) -> float:
     """Cyclic reduction over a chain of M KxK blocks: ~M eliminated nodes
     across the log2(M) levels, each paying one inverse (2 K^3) and four
@@ -242,6 +328,7 @@ def wkv6(
     chunk: int = 64,
     impl: str | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV6 recurrence; returns (output, final state)."""
     impl = impl or default_impl()
     if impl == "jnp":
         return ref.wkv6_chunked_ref(r, k, v, logw, u, state, chunk)
@@ -264,6 +351,7 @@ def ssd(
     chunk: int = 64,
     impl: str | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD (state-space dual) scan; returns (output, final state)."""
     impl = impl or default_impl()
     if impl == "jnp":
         return ref.ssd_chunked_ref(x, b, c, loga, state, chunk)

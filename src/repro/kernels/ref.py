@@ -14,9 +14,12 @@ import jax.numpy as jnp
 
 from repro.core.block_lu import (  # noqa: F401  (re-exports)
     BTFactors,
+    FusedSpikeFactors,
     btf_ref,
     btf_ul_ref,
     bts_ref,
+    fused_factor_spike_padded_ref,
+    fused_factor_spike_ref,
     gj_inverse,
 )
 

@@ -1,0 +1,117 @@
+"""Micro-benchmark calibration of the roofline hardware constants.
+
+The tpu/gpu entries of :data:`repro.launch.roofline.BACKEND_SPECS` are
+datasheet numbers, but no datasheet describes "whatever CPU the CI runner
+gives us" -- the cpu entry was a placeholder order of magnitude until it
+was measured.  This module measures the two roofline ceilings directly:
+
+  * ``measure_gemm_flops`` -- peak sustained f32 FLOP/s from a jitted
+    square matmul (the same XLA:CPU code path the solver's block-matmul
+    kernels lower to), median over repeats.
+  * ``measure_stream_bw``  -- sustained memory bandwidth from a jitted
+    out-of-cache array copy, counted STREAM-style (read + write bytes).
+
+Run it on the machine of interest::
+
+    python -m repro.launch.calibrate
+
+which prints the measured ceilings plus ready-to-paste environment
+overrides (``REPRO_PEAK_FLOPS`` / ``REPRO_HBM_BW``, consumed by
+:func:`repro.obs.cost.hardware_spec`).  Setting ``REPRO_CALIBRATE=1``
+makes ``hardware_spec`` run this calibration itself, once per process,
+instead of using the static table.
+
+The committed cpu entry in ``BACKEND_SPECS`` was produced by this module;
+see the provenance note there.  Calibration is intentionally cheap
+(~a second) -- it measures the *ceiling* terms only, not the solver.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .roofline import HardwareSpec
+
+
+def _median_seconds(fn, out, repeats: int) -> float:
+    """Median wall-clock of ``fn`` (device work blocked on) over repeats."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*out))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def measure_gemm_flops(n: int = 1024, repeats: int = 5) -> float:
+    """Sustained f32 FLOP/s of a jitted (n, n) @ (n, n) matmul."""
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (n, n), jnp.float32)
+    b = jax.random.normal(key, (n, n), jnp.float32)
+
+    @jax.jit
+    def gemm(a, b):
+        return a @ b
+
+    jax.block_until_ready(gemm(a, b))  # compile outside the timing loop
+    sec = _median_seconds(gemm, (a, b), repeats)
+    return 2.0 * n**3 / sec
+
+
+def measure_stream_bw(nbytes: int = 1 << 28, repeats: int = 5) -> float:
+    """Sustained memory bandwidth (bytes/s) of a jitted array traversal.
+
+    The copy reads and writes ``nbytes`` (STREAM "scale" convention:
+    2 x the array size per pass); the array is sized far past L2/L3 so
+    the measurement is the memory system, not the caches.
+    """
+    n = nbytes // 4
+    x = jnp.zeros((n,), jnp.float32)
+
+    @jax.jit
+    def scale(x):
+        return x * 1.0001
+
+    jax.block_until_ready(scale(x))
+    sec = _median_seconds(scale, (x,), repeats)
+    return 2.0 * nbytes / sec
+
+
+def calibrate(gemm_n: int = 1024, stream_bytes: int = 1 << 28,
+              repeats: int = 5) -> HardwareSpec:
+    """Measure both ceilings and return them as a :class:`HardwareSpec`."""
+    backend = jax.default_backend()
+    return HardwareSpec(
+        name=f"{backend}-calibrated",
+        peak_flops=measure_gemm_flops(gemm_n, repeats),
+        hbm_bw=measure_stream_bw(stream_bytes, repeats),
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--gemm-n", type=int, default=1024,
+                    help="square matmul size (default 1024)")
+    ap.add_argument("--stream-mib", type=int, default=256,
+                    help="stream array size in MiB (default 256)")
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args(argv)
+    spec = calibrate(args.gemm_n, args.stream_mib << 20, args.repeats)
+    print(f"backend        : {jax.default_backend()}")
+    print(f"peak_flops     : {spec.peak_flops:.4e} flop/s "
+          f"({spec.peak_flops / 1e9:.1f} GFLOP/s f32 gemm)")
+    print(f"hbm_bw         : {spec.hbm_bw:.4e} bytes/s "
+          f"({spec.hbm_bw / 1e9:.1f} GB/s stream)")
+    print("# env overrides for repro.obs.cost.hardware_spec:")
+    print(f"export REPRO_PEAK_FLOPS={spec.peak_flops:.4e}")
+    print(f"export REPRO_HBM_BW={spec.hbm_bw:.4e}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

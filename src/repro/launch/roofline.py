@@ -33,13 +33,13 @@ class HardwareSpec:
 
     ``peak_flops`` and ``hbm_bw`` bound the compute and memory terms of a
     stage's roofline time (``max(flops / peak_flops, bytes / hbm_bw)``).
-    The per-backend defaults below are deliberately *nominal* -- the cpu
-    entry in particular is a placeholder order of magnitude, not a
-    measured machine -- because the cost observatory uses them for
-    relative achieved-vs-roofline fractions along one trajectory, where a
-    constant scale error cancels.  Deployments that care about absolute
-    fractions override via ``REPRO_PEAK_FLOPS`` / ``REPRO_HBM_BW`` (see
-    :func:`repro.obs.cost.hardware_spec`).
+    The tpu/gpu defaults below are datasheet numbers; the cpu entry is
+    *measured* on the repo's benchmark runner class by
+    :mod:`repro.launch.calibrate` (a jitted gemm / stream micro-bench).
+    Deployments on different hardware override via ``REPRO_PEAK_FLOPS`` /
+    ``REPRO_HBM_BW``, or set ``REPRO_CALIBRATE=1`` to have
+    :func:`repro.obs.cost.hardware_spec` run the calibration itself once
+    per process.
     """
 
     name: str
@@ -53,9 +53,15 @@ BACKEND_SPECS = {
     "tpu": HardwareSpec("tpu-v5e", PEAK_FLOPS, HBM_BW),
     # A100-40GB-class: 19.5 TF/s f32 tensor, 1.55 TB/s HBM2e.
     "gpu": HardwareSpec("gpu-a100", 19.5e12, 1.555e12),
-    # Nominal server-CPU core-count-ish envelope: ~100 GFLOP/s sustained
-    # f32, ~50 GB/s memory stream.  Placeholder -- see HardwareSpec.
-    "cpu": HardwareSpec("cpu-nominal", 1e11, 5e10),
+    # Measured on the single-core CI runner class this repo benches on,
+    # via ``python -m repro.launch.calibrate`` (median of repeated jitted
+    # 1024^2 f32 gemm / 256 MiB stream passes): ~125 GFLOP/s, ~4.5 GB/s.
+    # The old nominal entry guessed the bandwidth ~10x too high (50 GB/s
+    # is a many-channel server socket, not one pinned core).  Re-measure
+    # with the same command when the runner class changes, or override
+    # per-machine via REPRO_PEAK_FLOPS / REPRO_HBM_BW / REPRO_CALIBRATE=1
+    # (see repro.obs.cost.hardware_spec).
+    "cpu": HardwareSpec("cpu-calibrated", 1.25e11, 4.5e9),
 }
 
 

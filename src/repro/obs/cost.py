@@ -70,15 +70,32 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 
+# Result of the one-shot REPRO_CALIBRATE=1 micro-benchmark; measured
+# once per process the first time hardware_spec() needs it.
+_CALIBRATED: Optional[HardwareSpec] = None
+_CALIBRATED_LOCK = threading.Lock()
+
+
 def hardware_spec(backend: Optional[str] = None) -> HardwareSpec:
     """The active backend's peak rates, with env overrides.
 
     ``REPRO_PEAK_FLOPS`` / ``REPRO_HBM_BW`` (floats, flops/s and bytes/s)
     override the per-backend defaults in
     :data:`repro.launch.roofline.BACKEND_SPECS` -- measured-machine
-    calibration without touching code.
+    calibration without touching code.  ``REPRO_CALIBRATE=1`` instead
+    *measures* this machine's ceilings once per process via
+    :func:`repro.launch.calibrate.calibrate` (a ~1 s gemm + stream
+    micro-bench); explicit env numbers still win over the measurement.
     """
     spec = backend_spec(backend or jax.default_backend())
+    if os.environ.get("REPRO_CALIBRATE") == "1":
+        global _CALIBRATED
+        with _CALIBRATED_LOCK:
+            if _CALIBRATED is None:
+                from ..launch.calibrate import calibrate
+
+                _CALIBRATED = calibrate()
+            spec = _CALIBRATED
     pf = os.environ.get("REPRO_PEAK_FLOPS")
     bw = os.environ.get("REPRO_HBM_BW")
     if pf or bw:
@@ -139,6 +156,7 @@ class CompileLog:
             }
 
     def totals(self) -> Tuple[int, float]:
+        """(compile count, cumulative compile seconds) observed so far."""
         with self._lock:
             return self._count, self._seconds
 
@@ -279,6 +297,7 @@ class StageCost:
         return self.roofline_s / measured_s
 
     def to_dict(self, measured_s: Optional[float] = None) -> dict:
+        """JSON-ready record; includes roofline_frac when measured_s given."""
         d = {
             "stage": self.stage,
             "flops": float(self.flops),
@@ -413,7 +432,7 @@ def solver_stage_costs(
     hw = hardware_spec()
     key = (
         bucket, s, variant, batched._factor_key(opts),
-        opts.tol, opts.maxiter, opts.use_cg, opts.iter_dtype,
+        opts.tol, opts.maxiter, opts.use_cg, opts.iter_dtype, opts.solver,
         str(dtype), jax.default_backend(), hw.name,
     )
     with _SOLVER_COSTS_LOCK:
@@ -435,6 +454,7 @@ def solver_stage_costs(
         kb, p, variant, batched._factor_key(opts)
     )
     pc_struct, d_struct = jax.eval_shape(stages, bands)
+    from ..core import sap as sap_mod
     from ..core.operators import BandedOperator
     from ..core.sap import SaPFactorization
 
@@ -450,6 +470,7 @@ def solver_stage_costs(
         maxiter=opts.maxiter,
         use_cg=opts.use_cg,
         iter_dtype=opts.iter_dtype,
+        solver=sap_mod.resolve_solver(opts.solver, opts.use_cg),
         d_factor=d_struct,
     )
     b_struct = jax.ShapeDtypeStruct((s, nb), dtype)

@@ -95,13 +95,16 @@ class _NullSpan:
         return False
 
     def annotate(self, **attrs: Any) -> "_NullSpan":
+        """No-op; mirrors Span.annotate."""
         return self
 
     def sync(self, value: Any) -> Any:
+        """No-op passthrough; mirrors Span.sync."""
         return value
 
     @property
     def duration_s(self) -> float:
+        """Always 0.0 for the disabled span."""
         return 0.0
 
 
@@ -173,6 +176,7 @@ class Span:
 
     @property
     def duration_s(self) -> float:
+        """Wall seconds between span open and close."""
         return max(self.t1 - self.t0, 0.0)
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
@@ -266,6 +270,7 @@ class Tracer:
     # -- queries ------------------------------------------------------------
 
     def roots(self) -> List[Span]:
+        """Top-level finished spans, ordered by start time."""
         with self._lock:
             return sorted(self._roots, key=lambda s: s.t0)
 
@@ -280,6 +285,7 @@ class Tracer:
             yield from rec(r)
 
     def find(self, name: str) -> List[Span]:
+        """All finished spans with the given name."""
         return [s for s in self.walk() if s.name == name]
 
     def durations(self) -> Dict[str, float]:
@@ -290,6 +296,7 @@ class Tracer:
         return out
 
     def clear(self) -> None:
+        """Drop all recorded spans."""
         with self._lock:
             self._roots = []
 

@@ -96,6 +96,7 @@ class SolveRequest:
 
     @property
     def done(self) -> bool:
+        """True once a SolveOutcome has been attached to this request."""
         return self.result is not None
 
 
@@ -137,7 +138,8 @@ def _opts_sig(opts: SaPOptions) -> tuple:
     they live under distinct cache entries.
     """
     return (opts.p, opts.variant, opts.reduced_solver,
-            opts.precond_dtype, opts.boost_eps)
+            opts.precond_dtype, opts.boost_eps,
+            opts.fused_factor, opts.solver)
 
 
 class SolverEngine:
@@ -213,6 +215,7 @@ class SolverEngine:
     # -- submission ---------------------------------------------------------
 
     def submit(self, req: SolveRequest) -> int:
+        """Enqueue a prepared request; returns its rid.  Thread-safe."""
         if req.fingerprint is None:  # hash outside any lock (the slow part)
             req.fingerprint = matrix_fingerprint(req.band)
         with self._qlock:
@@ -230,6 +233,7 @@ class SolverEngine:
 
     @property
     def pending(self) -> int:
+        """Number of submitted requests not yet drained by a step()."""
         with self._qlock:
             return len(self.queue)
 
@@ -256,6 +260,7 @@ class SolverEngine:
 
     @property
     def cached_factorizations(self) -> int:
+        """Current number of factorizations held in the LRU cache."""
         with self._lock:
             return len(self._cache)
 
@@ -608,6 +613,7 @@ class SolverEngine:
 
     @property
     def cache_hit_rate(self) -> float:
+        """Fraction of drained requests served from the factorization cache."""
         with self._lock:
             tot = self.stats["cache_hits"] + self.stats["cache_misses"]
             return self.stats["cache_hits"] / tot if tot else 0.0
